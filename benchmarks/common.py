@@ -1,0 +1,31 @@
+"""Shared benchmark helpers. Every benchmark prints ``name,us_per_call,
+derived`` CSV rows (one per measured configuration)."""
+from __future__ import annotations
+
+import time
+from typing import Callable, List, Tuple
+
+import jax
+
+ROWS: List[Tuple[str, float, str]] = []
+
+
+def emit(name: str, us_per_call: float, derived: str) -> None:
+    ROWS.append((name, us_per_call, derived))
+    print(f"{name},{us_per_call:.3f},{derived}")
+
+
+def time_jax(fn: Callable, *args, iters: int = 5, warmup: int = 2) -> float:
+    """Wall-clock microseconds per call of a jitted function (CPU)."""
+    for _ in range(warmup):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def header() -> None:
+    print("name,us_per_call,derived")

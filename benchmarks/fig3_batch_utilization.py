@@ -1,0 +1,40 @@
+"""Paper Fig. 3: the utilization gap — single-model inference at interactive
+batch sizes cannot saturate the device. We evaluate a ResNet-50-like GEMM
+population (im2col'd convs, m scales with batch) plus our transformer decode
+population on the calibrated V100 model and the TPU-v5e target."""
+from __future__ import annotations
+
+from benchmarks.common import emit
+from repro.configs import get_config
+from repro.core import CostModel, GemmShape, TPUV5E, V100
+from repro.core.kernelspec import gemm_population
+
+# representative ResNet-50 conv GEMMs at batch 1 (im2col):
+# (m = H*W, n = Cout, k = Cin*kh*kw)
+RESNET50_GEMMS = [
+    (3136, 64, 576), (3136, 64, 64), (3136, 256, 64),
+    (784, 128, 1152), (784, 512, 128), (196, 256, 2304),
+    (196, 1024, 256), (49, 512, 4608), (49, 2048, 512),
+]
+
+
+def run() -> None:
+    for device in (V100, TPUV5E):
+        cm = CostModel(device)
+        dtype_bytes = 4 if device.name == "v100" else 2
+        for batch in (1, 2, 4, 8, 16, 32, 64):
+            shapes = [GemmShape(m * batch, n, k, dtype_bytes)
+                      for m, n, k in RESNET50_GEMMS]
+            t = sum(cm.gemm_time(s) for s in shapes)
+            util = cm.utilization(shapes, t)
+            emit(f"fig3/{device.name}/resnet50_b{batch}", t * 1e6,
+                 f"util={util:.3f}")
+        # transformer decode population (gemma3) at decode batch sizes
+        cfg = get_config("gemma3-1b")
+        for batch in (1, 8, 64, 256):
+            pop = [s for tag, s in gemm_population(cfg, batch)
+                   if tag != "unembed"]
+            t = sum(cm.gemm_time(s) for s in pop) * cfg.num_layers
+            util = cm.utilization(pop * cfg.num_layers, t)
+            emit(f"fig3/{device.name}/gemma3_decode_b{batch}", t * 1e6,
+                 f"util={util:.3f}")

@@ -1,0 +1,24 @@
+"""Paper Fig. 4: mean latency of 1..15 replicas of one model on a V100 —
+time multiplexing degrades linearly; batched inference is far cheaper; the
+VLIW JIT closes most of the gap."""
+from __future__ import annotations
+
+from benchmarks.common import emit
+from repro.configs import get_config
+from repro.core import (CostModel, V100, make_requests, simulate_space_mux,
+                        simulate_time_mux, simulate_vliw)
+
+
+def run() -> None:
+    cm = CostModel(V100)
+    cfg = get_config("internvl2-2b")  # a ResNet-50-scale compute budget
+    for replicas in (1, 2, 4, 8, 15):
+        streams = [(cfg, 10.0, [0.0, 1e-4, 2e-4]) for _ in range(replicas)]
+        reqs = make_requests(streams, batch=8)
+        for name, fn in (("time", simulate_time_mux),
+                         ("space", simulate_space_mux),
+                         ("vliw", simulate_vliw)):
+            r = fn(reqs, cm)
+            emit(f"fig4/{name}/replicas{replicas}",
+                 r.mean_latency * 1e6,
+                 f"p99_ms={r.p(0.99)*1e3:.2f};util={r.utilization:.3f}")

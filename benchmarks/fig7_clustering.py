@@ -1,0 +1,26 @@
+"""Paper Fig. 7: GEMM problems across production DNNs concentrate into a few
+(n, k) clusters that coalesce with minimal padding. We cluster the full
+10-architecture zoo's per-step GEMM population."""
+from __future__ import annotations
+
+from benchmarks.common import emit
+from repro.configs import REGISTRY
+from repro.core import cluster_greedy, zoo_population
+
+
+def run() -> None:
+    for batch in (1, 8):
+        rows = zoo_population(list(REGISTRY.values()), batch=batch)
+        shapes = [s for _, _, s in rows]
+        clusters = cluster_greedy(shapes, max_waste=0.25)
+        big = sorted(clusters, key=lambda c: -len(c.members))[:3]
+        derived = ";".join(
+            f"cluster{i}[n<={c.pad_n},k<={c.pad_k}]x{len(c.members)}"
+            f"@waste{c.padding_waste:.2f}" for i, c in enumerate(big))
+        emit(f"fig7/zoo_b{batch}", float(len(clusters)),
+             f"problems={len(shapes)};clusters={len(clusters)};{derived}")
+        coalescible = sum(len(c.members) for c in clusters
+                          if len(c.members) > 1)
+        emit(f"fig7/zoo_b{batch}_coalescible",
+             100.0 * coalescible / len(shapes),
+             f"pct_in_multi_clusters={100.0*coalescible/len(shapes):.0f}%")

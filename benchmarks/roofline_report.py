@@ -1,0 +1,30 @@
+"""§Roofline: report the dry-run-derived roofline terms for every
+(arch × shape) on the single-pod mesh (reads experiments/dryrun/*.json;
+run ``python -m repro.launch.dryrun --all`` first)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import emit
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                          "dryrun")
+
+
+def run() -> None:
+    files = sorted(glob.glob(os.path.join(DRYRUN_DIR, "*__single.json")))
+    if not files:
+        emit("roofline/missing", 0.0,
+             "run `python -m repro.launch.dryrun --all` first")
+        return
+    for f in files:
+        r = json.load(open(f))
+        rf = r["roofline"]
+        emit(f"roofline/{r['arch']}/{r['shape']}",
+             rf["compute_s"] * 1e6,
+             f"memory_s={rf['memory_s']:.3f};coll_s={rf['collective_s']:.3f}"
+             f";dominant={rf['dominant']}"
+             f";useful={rf['useful_flops_ratio']:.3f}"
+             f";chips={rf['chips']}")

@@ -1,0 +1,64 @@
+"""End-to-end driver: serve a small model zoo with batched requests.
+
+Three tenants (dense gemma3-family, dense yi-family, attention-free mamba2)
+receive Poisson request traffic with latency SLOs; the engine runs the same
+trace under all three multiplexing regimes and prints the paper's comparison
+(§4 vs §5) with REAL greedy token generation.
+
+Run:  PYTHONPATH=src python examples/multi_tenant_serving.py
+"""
+import copy
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import smoke_config
+from repro.models import Model
+from repro.serving import ServingEngine, Tenant, make_trace
+
+
+def main() -> None:
+    def mk(arch, seed):
+        cfg = smoke_config(arch)
+        m = Model(cfg, param_dtype=jnp.float32)
+        return m, m.init(jax.random.PRNGKey(seed))
+
+    m1, p1 = mk("gemma3-1b", 1)
+    m2, p2 = mk("yi-9b", 2)
+    m3, p3 = mk("mamba2-2.7b", 3)
+
+    trace = make_trace(["chat", "code", "summarize"], rate_hz=2e4,
+                       n_per_tenant=4, prompt_len=8, max_new_tokens=6,
+                       slo_s=0.005, bursty=True)
+    print(f"trace: {len(trace)} requests over 3 tenants "
+          f"(bursty Poisson, 5 ms SLO)\n")
+
+    results = {}
+    for mode in ("time", "batched", "vliw"):
+        tenants = [Tenant("chat", m1, p1, cache_len=32, max_batch=4),
+                   Tenant("code", m2, p2, cache_len=32, max_batch=4),
+                   Tenant("summarize", m3, p3, cache_len=32, max_batch=4)]
+        eng = ServingEngine(tenants, mode=mode)
+        rep = eng.run(copy.deepcopy(trace))
+        results[mode] = rep
+        line = (f"{mode:8s} modeled={rep.modeled_time_s*1e3:7.3f} ms  "
+                f"mean_lat={rep.mean_latency*1e3:7.3f} ms  "
+                f"p99={rep.p_latency(0.99)*1e3:7.3f} ms  "
+                f"SLO={rep.slo_attainment:5.1%}  "
+                f"tok/s={rep.tokens_per_s:9.0f}")
+        if rep.jit:
+            line += (f"  [superkernels={rep.jit.superkernels} "
+                     f"mean_group={rep.jit.mean_group:.2f}]")
+        print(line)
+
+    a = [r.tokens_out for r in sorted(results["time"].requests,
+                                      key=lambda r: r.req_id)]
+    b = [r.tokens_out for r in sorted(results["vliw"].requests,
+                                      key=lambda r: r.req_id)]
+    print(f"\ngreedy tokens identical across regimes: {a == b}")
+    speedup = results["time"].modeled_time_s / results["vliw"].modeled_time_s
+    print(f"VLIW JIT speedup over time-multiplexing: {speedup:.2f}x")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,62 @@
+"""Quickstart: the OoO VLIW JIT in 60 seconds.
+
+Builds two small tenant models, declares their decode steps to the JIT, and
+shows the paper's three mechanisms working: shape clustering, superkernel
+coalescing (real Pallas grouped-GEMM execution), and SLO-aware accounting.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.configs import smoke_config
+from repro.core import CostModel, GemmShape, TPUV5E, V100, cluster_greedy, \
+    zoo_population
+from repro.core.jit import VLIWJit, build_dense_decode_program
+from repro.models import Model
+
+
+def main() -> None:
+    rng = jax.random.PRNGKey(0)
+
+    # --- 1. Fig-7 moment: the model zoo's GEMMs cluster tightly ------------
+    from repro.configs import REGISTRY
+    shapes = [s for _, _, s in zoo_population(list(REGISTRY.values()))]
+    clusters = cluster_greedy(shapes)
+    print(f"zoo: {len(shapes)} GEMM problems -> {len(clusters)} clusters "
+          f"(<=25% padding waste each)")
+
+    # --- 2. build two tenants and prefill them -----------------------------
+    tenants = []
+    for arch, seed in (("gemma3-1b", 1), ("yi-9b", 2)):
+        cfg = smoke_config(arch)
+        model = Model(cfg, param_dtype=jnp.float32)
+        params = model.init(jax.random.PRNGKey(seed))
+        prompt = {"tokens": jax.random.randint(rng, (2, 12), 0,
+                                               cfg.vocab_size)}
+        logits, cache = model.prefill(params, prompt, cache_len=32)
+        tok = jnp.argmax(logits[:, -1, :cfg.vocab_size], -1)[:, None]
+        tenants.append((model, params, tok.astype(jnp.int32), cache))
+        print(f"tenant {arch}: prefilled 12 tokens, first decode token "
+              f"{tok[:, 0].tolist()}")
+
+    # --- 3. declare both decode steps to the JIT and run coalesced ---------
+    jit = VLIWJit(CostModel(TPUV5E), max_group=8)
+    progs = [build_dense_decode_program(m, p, t, c, stream_id=i)
+             for i, (m, p, t, c) in enumerate(tenants)]
+    stats = jit.run(progs)
+    print(f"\nVLIW JIT: {stats.ops_executed} declared GEMMs -> "
+          f"{stats.superkernels} superkernels "
+          f"(mean group {stats.mean_group:.2f}, "
+          f"{stats.shared_dispatches} shared-weight dispatches)")
+    print(f"modeled speedup vs time-multiplexed dispatch: "
+          f"{stats.modeled_speedup:.2f}x")
+    for i, (model, params, tok, cache) in enumerate(tenants):
+        ref, _ = model.decode_step(params, tok, cache)
+        err = float(jnp.max(jnp.abs(progs[i].env["logits"][:, None] - ref)))
+        print(f"tenant {i}: JIT output matches monolithic decode "
+              f"(max err {err:.1e})")
+
+
+if __name__ == "__main__":
+    main()

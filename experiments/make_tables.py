@@ -1,0 +1,73 @@
+"""Render the dry-run result JSONs into the EXPERIMENTS.md tables.
+
+Usage: PYTHONPATH=src python experiments/make_tables.py [tag]
+"""
+import glob
+import json
+import os
+import sys
+
+HERE = os.path.dirname(__file__)
+
+
+def load(tag=""):
+    suffix = f"__{tag}.json" if tag else ".json"
+    rows = []
+    for f in sorted(glob.glob(os.path.join(HERE, "dryrun", "*.json"))):
+        base = os.path.basename(f)
+        parts = base[:-5].split("__")
+        if tag and (len(parts) < 4 or parts[3] != tag):
+            continue
+        if not tag and len(parts) != 3:
+            continue
+        rows.append(json.load(open(f)))
+    return rows
+
+
+def fmt(x, digits=3):
+    if x == 0:
+        return "0"
+    if x < 1e-3:
+        return f"{x:.1e}"
+    return f"{x:.{digits}f}"
+
+
+def roofline_table(rows, mesh="single"):
+    out = ["| arch | shape | compute_s | memory_s | collective_s | dominant "
+           "| MODEL_FLOPS/chip | useful ratio | temp GB |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if r["mesh"] != mesh:
+            continue
+        rf = r["roofline"]
+        temp = (r["memory"]["temp_bytes"] or 0) / 1e9
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {fmt(rf['compute_s'])} | "
+            f"{fmt(rf['memory_s'])} | {fmt(rf['collective_s'])} | "
+            f"{rf['dominant']} | {rf['model_flops']:.2e} | "
+            f"{rf['useful_flops_ratio']:.3f} | {temp:.1f} |")
+    return "\n".join(out)
+
+
+def dryrun_table(rows):
+    out = ["| arch | shape | mesh | chips | compile s | flops/chip | "
+           "bytes/chip | collective B/chip | args GB | temp GB |",
+           "|---|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        rf = r["roofline"]
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r['chips']} | "
+            f"{r['compile_s']:.1f} | {rf['hlo_flops']:.2e} | "
+            f"{rf['hlo_bytes']:.2e} | {rf['coll_bytes']:.2e} | "
+            f"{(r['memory']['argument_bytes'] or 0)/1e9:.2f} | "
+            f"{(r['memory']['temp_bytes'] or 0)/1e9:.1f} |")
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    tag = sys.argv[1] if len(sys.argv) > 1 else ""
+    rows = load(tag)
+    print(f"## Roofline (single-pod, 256 chips){f' [{tag}]' if tag else ''}\n")
+    print(roofline_table(rows, "single"))
+    print(f"\n## Dry-run (all meshes)\n")
+    print(dryrun_table(rows))

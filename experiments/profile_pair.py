@@ -1,0 +1,115 @@
+import os
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=512")
+"""Profile one (arch, shape) dry-run: top tensor shapes by total bytes and
+byte/flop census by opcode — the 'profile' step of the §Perf loop.
+
+Usage: PYTHONPATH=src python experiments/profile_pair.py <arch> <shape>
+"""
+import re
+import sys
+from collections import Counter, defaultdict
+
+import jax
+import jax.numpy as jnp
+
+from repro.launch import hlo_parse as H
+from repro.launch.dryrun import dryrun_one  # noqa: F401 (env setup)
+
+
+def compile_pair(arch, shape_name, multi_pod=False):
+    from repro.configs import INPUT_SHAPES, get_config
+    from repro.distributed.hints import activation_sharding
+    from repro.distributed.sharding import (batch_shardings, cache_shardings,
+                                            fsdp_axes, opt_state_shardings,
+                                            param_shardings)
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.launch.mesh import make_production_mesh
+    from repro.models.model import Model
+    from repro.training.optimizer import OptimizerConfig, init_opt_state
+    from repro.training.train_loop import make_train_step
+
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    model = Model(cfg, param_dtype=jnp.bfloat16,
+                  remat=(shape.kind == "train"))
+    rng = jax.random.PRNGKey(0)
+    dp = fsdp_axes(mesh)
+    bspec = dp if shape.global_batch % 16 == 0 else None
+    hints = {"btd": NamedSharding(mesh, P(bspec, None, None))}
+    if cfg.has_moe:
+        hints["moe_groups"] = 16
+        hints["moe_tokens"] = NamedSharding(mesh, P(dp, None, None))
+        if cfg.moe.num_experts % 16 != 0:
+            hints["moe_w_col"] = NamedSharding(mesh, P(None, None, "model"))
+            hints["moe_w_row"] = NamedSharding(mesh, P(None, "model", None))
+            hints["moe_buf"] = NamedSharding(mesh, P(dp, None, None, None))
+    with mesh, activation_sharding(hints):
+        p_sh = param_shardings(model, mesh, rng)
+        p_shape = jax.eval_shape(model.init, rng)
+        in_specs = model.input_specs(shape)
+        b_sh = batch_shardings(model, shape, mesh)
+        if shape.kind == "train":
+            opt_sh = opt_state_shardings(p_sh, mesh)
+            opt_shape = jax.eval_shape(init_opt_state, p_shape)
+            step = make_train_step(model, OptimizerConfig())
+            lowered = jax.jit(step, in_shardings=(p_sh, opt_sh, b_sh),
+                              out_shardings=(p_sh, opt_sh, None),
+                              donate_argnums=(0, 1)
+                              ).lower(p_shape, opt_shape, in_specs)
+        elif shape.kind == "prefill":
+            lowered = jax.jit(
+                lambda params, batch: model.prefill(
+                    params, batch, cache_len=shape.seq_len),
+                in_shardings=(p_sh, b_sh)).lower(p_shape, in_specs)
+        else:
+            c_sh = cache_shardings(model, in_specs["cache"], mesh, shape)
+            lowered = jax.jit(
+                model.decode_step,
+                in_shardings=(p_sh, b_sh["tokens"], c_sh),
+                out_shardings=(None, c_sh), donate_argnums=(2,)
+            ).lower(p_shape, in_specs["tokens"], in_specs["cache"])
+        return lowered.compile()
+
+
+def census(hlo, min_elems=3e4):
+    an = H.HloAnalyzer(hlo)
+    shape_bytes = defaultdict(float)   # shape str -> bytes × trips
+    opbytes = defaultdict(float)
+
+    def walk(name, in_fusion, mult):
+        comp = an.comps.get(name)
+        if comp is None:
+            return
+        for ins in comp.instrs:
+            if not in_fusion and ins.opcode not in H._FREE_OPS:
+                io = an._instr_io_bytes(ins, comp)
+                opbytes[ins.opcode] += io * mult
+                if ins.result_elems >= min_elems:
+                    shape_bytes[ins.result_shape_str.split("{")[0]] += \
+                        io * mult
+            called = H._CALLED_RE.findall(ins.attrs)
+            trip = 1
+            if ins.opcode == "while":
+                tm = H._TRIP_RE.search(ins.attrs)
+                trip = int(tm.group(1)) if tm else 1
+            for c in dict.fromkeys(called):
+                walk(c, in_fusion or ins.opcode == "fusion", mult * trip)
+
+    walk(an.entry, False, 1.0)
+    tot = an.analyze()
+    print(f"flops {tot.flops:.3e}  bytes {tot.bytes:.3e}  "
+          f"coll {tot.collective_bytes:.3e}")
+    print("\ntop result shapes by produced bytes (x trip count):")
+    for s, b in sorted(shape_bytes.items(), key=lambda kv: -kv[1])[:12]:
+        print(f"  {b:12.3e}  {s}")
+    print("\nbytes by opcode:")
+    for op, b in sorted(opbytes.items(), key=lambda kv: -kv[1])[:10]:
+        print(f"  {b:12.3e}  {op}")
+
+
+if __name__ == "__main__":
+    arch, shape = sys.argv[1], sys.argv[2]
+    compiled = compile_pair(arch, shape)
+    census(compiled.as_text())

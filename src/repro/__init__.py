@@ -1,0 +1,9 @@
+"""repro — a multi-pod JAX reproduction of "The OoO VLIW JIT Compiler for
+GPU Inference" (Jain et al., 2019), adapted TPU-native.
+
+Layers (bottom-up): models/ (10-arch zoo) → kernels/ (Pallas superkernels)
+→ core/ (the paper: clustering, coalescing, OoO scheduling, autotuning)
+→ serving/ + training/ → distributed/ + launch/ (multi-pod dry-run).
+"""
+
+__version__ = "0.1.0"

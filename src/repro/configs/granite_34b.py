@@ -1,0 +1,15 @@
+"""Granite-34B-Code — llama-architecture dense decoder, MQA (kv=1)
+[arXiv:2405.04324]."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="granite-34b",
+    arch_type="dense",
+    num_layers=88,
+    d_model=6144,
+    num_heads=48,
+    num_kv_heads=1,
+    d_ff=24576,
+    vocab_size=49152,
+    source="arXiv:2405.04324",
+)

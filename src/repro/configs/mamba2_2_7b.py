@@ -1,0 +1,17 @@
+"""Mamba2-2.7B — attention-free SSD (state-space duality) stack
+[arXiv:2405.21060]."""
+from repro.configs.base import ModelConfig, SSMConfig
+
+CONFIG = ModelConfig(
+    name="mamba2-2.7b",
+    arch_type="ssm",
+    num_layers=64,
+    d_model=2560,
+    num_heads=0,
+    num_kv_heads=0,
+    d_ff=0,
+    vocab_size=50280,
+    ssm=SSMConfig(d_state=128, head_dim=64, expand=2, chunk_size=256),
+    tie_embeddings=True,
+    source="arXiv:2405.21060",
+)

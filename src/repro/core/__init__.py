@@ -1,0 +1,28 @@
+"""The paper's primary contribution: the OoO VLIW JIT.
+
+kernelspec — declarative dispatch IR (§5.1); clustering — Fig. 7 shape
+clusters; coalescer — superkernel planning (§5.3); scheduler — OoO EDF +
+slack staggering (§5.2); autotuner — greedy vs collaborative AOT tuning
+(Table 1); costmodel — calibrated V100 + TPU-v5e roofline device models;
+simulator — event-driven multiplexing comparison (Figs 4–6).
+"""
+from repro.core.autotuner import Autotuner, TuneResult
+from repro.core.clustering import Cluster, cluster_greedy, group_ops_exact
+from repro.core.coalescer import Coalescer, SuperkernelPlan
+from repro.core.costmodel import (BlockConfig, CostModel, Device, GemmShape,
+                                  TPUV5E, V100)
+from repro.core.kernelspec import KernelOp, gemm_population, make_op, \
+    stream_program, zoo_population
+from repro.core.scheduler import Decision, OoOScheduler, SchedulerConfig
+from repro.core.simulator import (POLICIES, Request, SimResult, make_requests,
+                                  simulate_space_mux, simulate_time_mux,
+                                  simulate_vliw)
+
+__all__ = [
+    "Autotuner", "BlockConfig", "Cluster", "Coalescer", "CostModel",
+    "Decision", "Device", "GemmShape", "KernelOp", "OoOScheduler", "POLICIES",
+    "Request", "SchedulerConfig", "SimResult", "SuperkernelPlan", "TPUV5E",
+    "TuneResult", "V100", "cluster_greedy", "gemm_population",
+    "group_ops_exact", "make_op", "make_requests", "simulate_space_mux",
+    "simulate_time_mux", "simulate_vliw", "stream_program", "zoo_population",
+]

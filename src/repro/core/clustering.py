@@ -1,0 +1,96 @@
+"""GEMM shape clustering (paper Fig. 7).
+
+The paper's observation: matrix-multiply problems across production DNNs
+concentrate into a small number of (n, k) clusters, so cross-stream problems
+can be coalesced into superkernels with minimal padding. We cluster in
+log-space over (n, k) — the weight dims, which must match exactly or pad —
+and keep m (the token/batch dim) free, because the coalesced kernel
+concatenates problems along m.
+
+Two levels:
+  * ``exact_key``      — problems coalescible with ZERO padding (same n, k);
+  * ``cluster_greedy`` — agglomerative log-space clustering with a padding-
+    waste bound, reproducing the A/B/C superkernel clusters of Fig. 7.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Sequence, Tuple
+
+from repro.core.costmodel import GemmShape
+from repro.core.kernelspec import KernelOp
+
+
+def exact_key(shape: GemmShape) -> Tuple[int, int, int]:
+    return (shape.n, shape.k, shape.dtype_bytes)
+
+
+@dataclasses.dataclass
+class Cluster:
+    """A set of problems padded to a common (n, k) envelope."""
+
+    members: List[GemmShape]
+
+    @property
+    def pad_n(self) -> int:
+        return max(s.n for s in self.members)
+
+    @property
+    def pad_k(self) -> int:
+        return max(s.k for s in self.members)
+
+    @property
+    def useful_flops(self) -> float:
+        return sum(s.flops for s in self.members)
+
+    @property
+    def padded_flops(self) -> float:
+        n, k = self.pad_n, self.pad_k
+        return sum(2.0 * s.m * n * k for s in self.members)
+
+    @property
+    def padding_waste(self) -> float:
+        """Fraction of superkernel flops burned on padding (0 = perfect)."""
+        pf = self.padded_flops
+        return 0.0 if pf == 0 else 1.0 - self.useful_flops / pf
+
+
+def _log_dist(a: GemmShape, b: GemmShape) -> float:
+    return math.hypot(math.log2(a.n) - math.log2(b.n),
+                      math.log2(a.k) - math.log2(b.k))
+
+
+def cluster_greedy(shapes: Sequence[GemmShape], max_waste: float = 0.25
+                   ) -> List[Cluster]:
+    """Greedy agglomerative clustering under a padding-waste bound.
+
+    Problems are sorted by (n, k) volume and greedily absorbed into the
+    nearest existing cluster if the merged padding waste stays below
+    ``max_waste``; otherwise they seed a new cluster. Deterministic and
+    O(S·C) — the populations involved are small (paper §5.3: 'the set of
+    operations to coalesce is restricted largely to algebraic tensor ops').
+    """
+    clusters: List[Cluster] = []
+    for s in sorted(shapes, key=lambda s: (s.n * s.k, s.n, s.k), reverse=True):
+        best, best_d = None, float("inf")
+        for c in clusters:
+            trial = Cluster(c.members + [s])
+            if trial.padding_waste <= max_waste:
+                d = _log_dist(s, c.members[0])
+                if d < best_d:
+                    best, best_d = c, d
+        if best is None:
+            clusters.append(Cluster([s]))
+        else:
+            best.members.append(s)
+    return clusters
+
+
+def group_ops_exact(ops: Sequence[KernelOp]) -> Dict[Tuple, List[KernelOp]]:
+    """Bucket ready ops by zero-padding coalescing key (kind + exact n,k)."""
+    groups: Dict[Tuple, List[KernelOp]] = {}
+    for op in ops:
+        key = (op.kind,) + exact_key(op.shape)
+        groups.setdefault(key, []).append(op)
+    return groups

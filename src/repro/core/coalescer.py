@@ -1,0 +1,90 @@
+"""Superkernel planning (paper §5.3 "VLIW compilation").
+
+A ``SuperkernelPlan`` is the VLIW instruction word: a set of mutually
+independent GEMM problems (from different streams) packed for one dispatch.
+The coalescer checks feasibility (VMEM footprint of the tile working set,
+padding waste bound), picks the block config (from the autotuner's table if
+present), and estimates the dispatch latency with the cost model.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.core.clustering import Cluster, exact_key
+from repro.core.costmodel import BlockConfig, CostModel, DEFAULT_BLOCK, GemmShape
+from repro.core.kernelspec import KernelOp
+
+
+@dataclasses.dataclass
+class SuperkernelPlan:
+    ops: List[KernelOp]
+    block: BlockConfig
+    est_time_s: float
+    padding_waste: float
+    shared_operand: bool = False
+
+    @property
+    def shapes(self) -> List[GemmShape]:
+        return [o.shape for o in self.ops]
+
+    @property
+    def num_problems(self) -> int:
+        return len(self.ops)
+
+
+class Coalescer:
+    """Packs ready, shape-compatible ops into superkernel plans."""
+
+    def __init__(self, cost: CostModel, max_group: int = 64,
+                 max_waste: float = 0.25,
+                 tuned_blocks: Optional[Dict[Tuple, BlockConfig]] = None):
+        self.cost = cost
+        self.max_group = max_group
+        self.max_waste = max_waste
+        self.tuned_blocks = tuned_blocks or {}
+
+    # ------------------------------------------------------------------
+    def block_for(self, shapes: Sequence[GemmShape]) -> BlockConfig:
+        key = exact_key(shapes[0])
+        if key in self.tuned_blocks:
+            return self.tuned_blocks[key]
+        # default: clamp tile to the (padded) problem size, MXU-aligned
+        n = max(s.n for s in shapes)
+        m = max(s.m for s in shapes)
+        bm = min(128, max(8, 1 << (max(m - 1, 1)).bit_length()))
+        bn = min(128, max(128, n)) if n >= 128 else n
+        return BlockConfig(bm=bm, bn=max(bn, 8), bk=DEFAULT_BLOCK.bk)
+
+    def vmem_ok(self, shapes: Sequence[GemmShape], block: BlockConfig) -> bool:
+        k = max(s.k for s in shapes)
+        return block.vmem_usage(k) <= self.cost.device.vmem_bytes
+
+    # ------------------------------------------------------------------
+    def plan(self, ops: Sequence[KernelOp]) -> SuperkernelPlan:
+        """Plan a superkernel for an already-compatible op group."""
+        ops = list(ops)[: self.max_group]
+        shapes = [o.shape for o in ops]
+        block = self.block_for(shapes)
+        # same weights across streams (same model+tag) => operand sharing
+        shared = len({(o.model_id, o.tag, o.seq_index) for o in ops}) == 1 \
+            and len(ops) > 1
+        cluster = Cluster(list(shapes))
+        t = self.cost.coalesced_time(shapes, block, shared_operand=shared)
+        return SuperkernelPlan(ops=ops, block=block, est_time_s=t,
+                               padding_waste=cluster.padding_waste,
+                               shared_operand=shared)
+
+    # ------------------------------------------------------------------
+    def speedup_vs_serial(self, plan: SuperkernelPlan) -> float:
+        t_serial = self.cost.time_multiplexed(plan.shapes, plan.block)
+        return t_serial / plan.est_time_s if plan.est_time_s > 0 else 1.0
+
+    def marginal_gain(self, base_ops: Sequence[KernelOp],
+                      extra: KernelOp) -> float:
+        """Time saved by adding ``extra`` to the group vs running it alone."""
+        t_alone = self.cost.gemm_time(extra.shape)
+        t_base = self.plan(list(base_ops)).est_time_s if base_ops else 0.0
+        t_joint = self.plan(list(base_ops) + [extra]).est_time_s
+        return (t_base + t_alone) - t_joint

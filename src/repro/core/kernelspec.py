@@ -1,0 +1,135 @@
+"""Declarative kernel dispatch IR (paper §5.1).
+
+Instead of "early-binding, context-free" launches, tenants declare WHAT to
+compute — a ``KernelOp`` (operator + problem dims + stream + deadline) — and
+the JIT owns HOW: binding, packing, ordering. A stream of ``KernelOp``s is
+the analogue of a VLIW instruction stream; ops from different streams are
+mutually independent by construction (paper §1, reason (b) VLIW fits).
+
+``gemm_population(config, ...)`` enumerates the GEMM problems one
+architecture contributes per step — the population clustered in Fig. 7.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.configs.base import ModelConfig
+from repro.core.costmodel import GemmShape
+
+
+@dataclasses.dataclass
+class KernelOp:
+    """One declared unit of work in a tenant's instruction stream."""
+
+    op_id: int
+    stream_id: int
+    kind: str                  # "gemm" | "gemv" | "attn" | "other"
+    shape: GemmShape
+    arrival_t: float = 0.0
+    deadline_t: float = float("inf")
+    # intra-stream program order: op i must not run before op i-1 of the same
+    # stream has completed (data dependence through the residual stream).
+    seq_index: int = 0
+    tag: str = ""              # e.g. "qkv_proj", "ffn_up", "expert_gemm"
+    model_id: str = ""
+
+    @property
+    def slack(self) -> float:
+        return self.deadline_t - self.arrival_t
+
+
+_OP_COUNTER = itertools.count()
+
+
+def make_op(stream_id: int, kind: str, shape: GemmShape, *, arrival_t=0.0,
+            deadline_t=float("inf"), seq_index=0, tag="", model_id="") -> KernelOp:
+    return KernelOp(next(_OP_COUNTER), stream_id, kind, shape, arrival_t,
+                    deadline_t, seq_index, tag, model_id)
+
+
+# ---------------------------------------------------------------------------
+# GEMM population extraction (Fig. 7)
+# ---------------------------------------------------------------------------
+
+def gemm_population(cfg: ModelConfig, batch: int, mode: str = "decode"
+                    ) -> List[Tuple[str, GemmShape]]:
+    """The per-step GEMM problems of one architecture.
+
+    mode="decode": m = batch (token-parallel GEMV-like problems).
+    mode="prefill": m = batch * seq would be supplied by caller via ``batch``.
+    Returns (tag, GemmShape) pairs, one entry per layer occurrence collapsed
+    to a single representative (the population repeats ``num_layers`` times).
+    """
+    d = cfg.d_model
+    hd = cfg.resolved_head_dim
+    out: List[Tuple[str, GemmShape]] = []
+    m = batch
+
+    def g(tag: str, n: int, k: int):
+        out.append((tag, GemmShape(m=m, n=n, k=k)))
+
+    if cfg.arch_type == "ssm":
+        s = cfg.ssm
+        d_inner = s.expand * d
+        g("ssm_in_proj", 2 * d_inner + 2 * s.d_state + s.num_heads(d), d)
+        g("ssm_out_proj", d, d_inner)
+    else:
+        g("attn_q", cfg.num_heads * hd, d)
+        g("attn_kv", 2 * cfg.num_kv_heads * hd, d)
+        g("attn_o", d, cfg.num_heads * hd)
+        if cfg.has_moe:
+            # per-expert problems: tokens split across experts
+            per_expert_m = max(1, (m * cfg.moe.top_k) // cfg.moe.num_experts)
+            for tag, n, k in [("expert_gate", cfg.d_ff, d),
+                              ("expert_up", cfg.d_ff, d),
+                              ("expert_down", d, cfg.d_ff)]:
+                out.append((tag, GemmShape(m=per_expert_m, n=n, k=k)))
+            g("router", cfg.moe.num_experts, d)
+        elif cfg.arch_type == "hybrid":
+            s = cfg.ssm
+            d_inner = s.expand * d
+            g("ssm_in_proj", 2 * d_inner + 2 * s.d_state + s.num_heads(d), d)
+            g("ssm_out_proj", d, d_inner)
+            g("ffn_gate", cfg.d_ff, d)
+            g("ffn_up", cfg.d_ff, d)
+            g("ffn_down", d, cfg.d_ff)
+        else:
+            g("ffn_gate", cfg.d_ff, d)
+            g("ffn_up", cfg.d_ff, d)
+            g("ffn_down", d, cfg.d_ff)
+    g("unembed", cfg.padded_vocab, d)
+    return out
+
+
+def stream_program(cfg: ModelConfig, stream_id: int, batch: int, *,
+                   arrival_t: float = 0.0, slo_s: float = float("inf"),
+                   mode: str = "decode") -> List[KernelOp]:
+    """Expand one request into its full per-layer op stream (program order)."""
+    ops: List[KernelOp] = []
+    seq = 0
+    layer_ops = gemm_population(cfg, batch, mode)
+    body = [t for t in layer_ops if t[0] != "unembed"]
+    for _layer in range(cfg.num_layers):
+        for tag, shape in body:
+            kind = "gemv" if shape.m <= 8 else "gemm"
+            ops.append(make_op(stream_id, kind, shape, arrival_t=arrival_t,
+                               deadline_t=arrival_t + slo_s, seq_index=seq,
+                               tag=tag, model_id=cfg.name))
+            seq += 1
+    tag, shape = layer_ops[-1]
+    ops.append(make_op(stream_id, "gemm", shape, arrival_t=arrival_t,
+                       deadline_t=arrival_t + slo_s, seq_index=seq, tag=tag,
+                       model_id=cfg.name))
+    return ops
+
+
+def zoo_population(configs: Sequence[ModelConfig], batch: int = 1
+                   ) -> List[Tuple[str, str, GemmShape]]:
+    """(arch, tag, shape) for the whole zoo — the Fig. 7 scatter."""
+    rows = []
+    for cfg in configs:
+        for tag, shape in gemm_population(cfg, batch):
+            rows.append((cfg.name, tag, shape))
+    return rows

@@ -1,0 +1,133 @@
+"""Out-of-order, SLO-aware space-time scheduler (paper §5.2).
+
+The scheduler owns the ready queue of declared ops across all streams and
+decides, at each device-free instant, between:
+
+  * DISPATCH — issue the best coalesced superkernel now;
+  * WAIT     — deliberately delay (stagger) because the cost model predicts a
+               better-packed superkernel within the earliest-deadline op's
+               slack window (paper: "purposefully delays/staggers ill-fitting
+               kernels for better coalescing at a (slightly) later time").
+
+Deadline accounting is per-op: an op's *latest start* is its request deadline
+minus the modeled critical-path time of everything still ahead of it in its
+stream. EDF over latest-start drives priority; ops past latest start are
+issued immediately (alone if nothing matches), and requests whose deadline is
+already unmeetable are counted as misses but still run (paper §5.2 evicts
+degraded stragglers rather than cascading them).
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import math
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.core.clustering import group_ops_exact
+from repro.core.coalescer import Coalescer, SuperkernelPlan
+from repro.core.costmodel import CostModel
+from repro.core.kernelspec import KernelOp
+
+
+@dataclasses.dataclass
+class Decision:
+    kind: str                      # "dispatch" | "wait" | "idle"
+    plan: Optional[SuperkernelPlan] = None
+    wait_until: float = 0.0
+
+
+@dataclasses.dataclass
+class SchedulerConfig:
+    max_group: int = 64
+    # minimum modeled benefit (seconds) required to justify waiting
+    min_wait_gain_s: float = 2e-6
+    # never wait longer than this even with infinite slack
+    max_wait_s: float = 500e-6
+    # target device fill: stop growing a group once it reaches this many tiles
+    target_tiles: int = 0          # 0 -> device.num_units
+
+
+class OoOScheduler:
+    def __init__(self, cost: CostModel, coalescer: Coalescer,
+                 cfg: SchedulerConfig = SchedulerConfig()):
+        self.cost = cost
+        self.coalescer = coalescer
+        self.cfg = cfg
+        self.ready: List[KernelOp] = []
+        # per-stream remaining critical path (sum of modeled op times)
+        self._stream_remaining: Dict[int, float] = {}
+        # next expected arrival (the simulator/engine tells us)
+        self.next_arrival_t: float = math.inf
+
+    # ------------------------------------------------------------------
+    # queue management
+    # ------------------------------------------------------------------
+    def annotate_stream(self, ops: Sequence[KernelOp]) -> None:
+        """Compute per-op latest-start deadlines for one stream's program."""
+        suffix = 0.0
+        times = [self.cost.gemm_time(op.shape) for op in ops]
+        for op, t in zip(reversed(list(ops)), reversed(times)):
+            suffix += t
+            # store latest start in deadline_t's shadow via attribute
+            op.latest_start_t = op.deadline_t - suffix  # type: ignore[attr-defined]
+
+    def push(self, ops: Sequence[KernelOp]) -> None:
+        for op in ops:
+            if not hasattr(op, "latest_start_t"):
+                op.latest_start_t = op.deadline_t - self.cost.gemm_time(op.shape)  # type: ignore[attr-defined]
+        self.ready.extend(ops)
+
+    def pending(self) -> int:
+        return len(self.ready)
+
+    # ------------------------------------------------------------------
+    # the decision procedure
+    # ------------------------------------------------------------------
+    def decide(self, now: float) -> Decision:
+        if not self.ready:
+            return Decision("idle")
+        cfg = self.cfg
+        target_tiles = cfg.target_tiles or self.cost.device.num_units
+
+        # 1. EDF anchor: the op with the earliest latest-start
+        anchor = min(self.ready, key=lambda o: o.latest_start_t)  # type: ignore[attr-defined]
+
+        # 2. its zero-padding coalescing group among ready ops
+        groups = group_ops_exact(self.ready)
+        akey = next(k for k, v in groups.items() if anchor in v)
+        group = groups[akey]
+        # order group by urgency; anchor first
+        group = sorted(group, key=lambda o: o.latest_start_t)  # type: ignore[attr-defined]
+        group = group[: cfg.max_group]
+        plan = self.coalescer.plan(group)
+
+        # 3. stagger decision: is the group under-filling the device, and
+        #    does the anchor have slack to wait for more arrivals?
+        tiles = sum(self.cost.tiles(s, plan.block) for s in plan.shapes)
+        slack = anchor.latest_start_t - now  # type: ignore[attr-defined]
+        if (tiles < target_tiles and slack > 0
+                and self.next_arrival_t < now + min(slack, cfg.max_wait_s)):
+            # napkin check: modeled gain of one more same-shape problem
+            probe = KernelOp(-1, -1, anchor.kind, anchor.shape)
+            gain = self.coalescer.marginal_gain(group, probe)
+            if gain > cfg.min_wait_gain_s:
+                return Decision("wait",
+                                wait_until=min(now + slack,
+                                               self.next_arrival_t,
+                                               now + cfg.max_wait_s))
+
+        for op in plan.ops:
+            self.ready.remove(op)
+        return Decision("dispatch", plan=plan)
+
+    # ------------------------------------------------------------------
+    def drain(self, now: float = 0.0) -> List[SuperkernelPlan]:
+        """Dispatch everything (no waiting) — used by tests and batch mode."""
+        plans = []
+        self.next_arrival_t = math.inf
+        while self.ready:
+            d = self.decide(now)
+            assert d.kind == "dispatch" and d.plan is not None
+            plans.append(d.plan)
+            now += d.plan.est_time_s
+        return plans

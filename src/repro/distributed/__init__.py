@@ -1,0 +1,8 @@
+from repro.distributed.sharding import (batch_shardings, cache_shardings,
+                                        fsdp_axes, opt_state_shardings,
+                                        param_shardings)
+
+__all__ = [
+    "batch_shardings", "cache_shardings", "fsdp_axes",
+    "opt_state_shardings", "param_shardings",
+]

@@ -1,0 +1,189 @@
+"""Logical-axis sharding rules → NamedSharding pytrees.
+
+Mesh: (data, model) single-pod / (pod, data, model) multi-pod
+(launch/mesh.py).
+
+Baseline scheme (uniform across all 10 assigned architectures):
+
+  * FFN + vocab: tensor-parallel over "model" (Megatron column/row pair:
+    w_gate/w_up shard d_ff, w_down shards it back with one psum; embedding
+    and unembedding shard the vocab → vocab-parallel cross-entropy);
+  * attention + SSM mixers: DATA-parallel compute, weights replicated over
+    "model" and FSDP-sharded over the data/pod axes. Rationale: the assigned
+    head counts (4, 6, 25, 40, 48 q-heads; 1–8 kv-heads) are mostly not
+    16-divisible, and sharding the packed H·hd projection output makes the
+    [B,S,H,hd] reshape cross shard boundaries — XLA then replicates whole
+    activations mid-graph (measured: batch-replicated f32[256,4096,·]
+    intermediates). Head-aligned TP for the divisible archs is a recorded
+    §Perf hillclimb, not the baseline.
+  * MoE experts: expert dim over the data/pod axes (expert parallelism)
+    when divisible (llama4: 128/16 ✓), else FSDP over d_model (grok: 8 < 16);
+    d_ff over "model" within each expert.
+  * decode KV caches: SEQUENCE-sharded over "model" (uniform for every
+    GQA/MQA config, no head divisibility constraints); batch over data when
+    divisible; long_500k (batch 1) shards its 524k sequence over
+    data×model. Softmax/psum over the sharded seq dim is inserted by SPMD.
+
+Every assignment is divisibility-checked with graceful fallbacks.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import InputShape, ModelConfig
+
+
+def fsdp_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def _axis_size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def _fits(mesh: Mesh, dim: int, axes) -> bool:
+    return dim % _axis_size(mesh, axes) == 0
+
+
+def _p(n_lead: int, *spec) -> P:
+    return P(*([None] * n_lead + list(spec)))
+
+
+# replicated-over-model, FSDP-over-data weights (attention + SSM mixers)
+_DP_IN = {"wq", "wk", "wv", "in_proj"}    # [d_in, n]: FSDP d_in
+_DP_OUT = {"wo", "out_proj"}              # [n, d_out]: FSDP d_out
+# Megatron TP pair (dense FFN)
+_TP_COL = {"w_gate", "w_up"}              # [d, ff]: FSDP d, TP ff
+_TP_ROW = {"w_down"}                      # [ff, d]: TP ff, FSDP d
+
+
+def _spec_for(path: str, shape, mesh: Mesh) -> P:
+    fsdp = fsdp_axes(mesh)
+    stacked = ("blocks" in path)
+    n_lead = 1 if stacked else 0
+    name = path.split("/")[-1]
+    nd = len(shape)
+
+    def fit(dim, axes):
+        return axes if _fits(mesh, shape[dim], axes) else None
+
+    if name == "embed":
+        return P(fit(0, "model"), None)
+    if name == "unembed":
+        return P(fit(0, fsdp), fit(1, "model"))
+    if name == "router":
+        return _p(n_lead, None, None) if nd == n_lead + 2 else P(*[None] * nd)
+    if name in ("w_gate", "w_up", "w_down") and nd == n_lead + 3:
+        # MoE expert weights [L, E, a, b]: gate/up are [.., E, d, ff]
+        # (TP the ff output), down is [.., E, ff, d] (TP the ff input).
+        tp_dim = n_lead + (2 if name != "w_down" else 1)
+        other = n_lead + (1 if name != "w_down" else 2)
+        spec = [None] * nd
+        spec[tp_dim] = fit(tp_dim, "model")
+        if _fits(mesh, shape[n_lead], fsdp):
+            spec[n_lead] = fsdp           # expert parallelism
+        elif spec[other] is None:
+            spec[other] = fit(other, fsdp)  # grok: FSDP d_model instead
+        return P(*spec)
+    if nd == n_lead + 2:
+        i, o = n_lead, n_lead + 1
+        if name in _DP_IN:
+            return _p(n_lead, fit(i, fsdp), None)
+        if name in _DP_OUT:
+            return _p(n_lead, None, fit(o, fsdp))
+        if name in _TP_COL:
+            return _p(n_lead, fit(i, fsdp), fit(o, "model"))
+        if name in _TP_ROW:
+            return _p(n_lead, fit(i, "model"), fit(o, fsdp))
+    # conv kernels, norms, biases, 1D per-layer params: replicate
+    return P(*([None] * nd))
+
+
+def _named(mesh: Mesh, spec: P) -> NamedSharding:
+    return NamedSharding(mesh, spec)
+
+
+def param_shardings(model, mesh: Mesh, rng=None) -> Any:
+    """NamedSharding pytree matching ``model.init`` output (no allocation)."""
+    rng = rng if rng is not None else jax.random.PRNGKey(0)
+    shapes = jax.eval_shape(model.init, rng)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(shapes)
+    out = []
+    for path, leaf in flat:
+        pstr = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                        for p in path)
+        out.append(_named(mesh, _spec_for(pstr, leaf.shape, mesh)))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def opt_state_shardings(param_sh: Any, mesh: Mesh) -> Any:
+    """OptState(step, mu, nu): moments follow the params; step replicated."""
+    from repro.training.optimizer import OptState
+    return OptState(
+        step=_named(mesh, P()),
+        mu=jax.tree_util.tree_map(lambda s: s, param_sh),
+        nu=jax.tree_util.tree_map(lambda s: s, param_sh))
+
+
+def batch_shardings(model, shape: InputShape, mesh: Mesh) -> Dict[str, Any]:
+    """Shardings for the input batch of the step selected by shape.kind."""
+    dp = fsdp_axes(mesh)
+    B = shape.global_batch
+    bspec = dp if _fits(mesh, B, dp) else (
+        "data" if _fits(mesh, B, "data") else None)
+    out: Dict[str, Any] = {}
+    ins = model.input_specs(shape)
+    for key, val in ins.items():
+        if key == "cache":
+            out[key] = cache_shardings(model, val, mesh, shape)
+        elif key in ("tokens", "labels"):
+            out[key] = _named(mesh, P(bspec, None))
+        else:  # patch_embeds / frames: [B, T, d]
+            out[key] = _named(mesh, P(bspec, None, None))
+    return out
+
+
+def cache_shardings(model, cache_shapes: Any, mesh: Mesh,
+                    shape: InputShape) -> Any:
+    """Decode-cache shardings: sequence over "model" (plus data when the
+    batch can't use it), batch over data when divisible."""
+    dp = fsdp_axes(mesh)
+    B = shape.global_batch
+    batch_ok = _fits(mesh, B, dp)
+    bspec = dp if batch_ok else None
+    seq_axes = ("model",) if batch_ok else tuple(list(dp) + ["model"])
+
+    def seq_spec(dim: int):
+        if _fits(mesh, dim, seq_axes):
+            return seq_axes
+        return "model" if _fits(mesh, dim, "model") else None
+
+    def spec_leaf(path, leaf):
+        name = str(getattr(path[-1], "key", ""))
+        nd = len(leaf.shape)
+        if name in ("k", "v", "cross_k", "cross_v", "k_scale", "v_scale"):
+            # [L, B, Hkv, S, hd]
+            return _named(mesh, P(None, bspec, None,
+                                  seq_spec(leaf.shape[3]), None))
+        if name == "h":      # [L, B, H, P, N] — small recurrent state
+            return _named(mesh, P(None, bspec, None, None, None))
+        if name == "conv":   # [L, B, K-1, convdim]
+            return _named(mesh, P(None, bspec, None, None))
+        if name == "pos":
+            return _named(mesh, P(bspec) if nd == 1 else P())
+        return _named(mesh, P(*([None] * nd)))
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache_shapes)
+    return jax.tree_util.tree_unflatten(
+        treedef, [spec_leaf(p, l) for p, l in flat])

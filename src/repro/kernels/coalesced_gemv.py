@@ -1,0 +1,62 @@
+"""Coalesced matrix-vector superkernel (paper §5.3: RNN/LSTM inference).
+
+Packs G decode-time matvecs — one per stream — into a single Pallas kernel.
+Two regimes:
+
+  * distinct weights (different tenants / different layers): batched GEMV,
+    grid over (problem, n-tile), each step streams one (K × bn) weight panel;
+  * shared weights (G streams of the SAME model+layer — the paper's RNN
+    claim): the packer concatenates vectors into one [G, K] matrix and calls
+    the plain GEMM path instead, loading the weight panel ONCE (see
+    ops.coalesced_matvec which makes this dispatch decision).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, w_ref, o_ref, acc_ref, *, nk: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # [1, bk] @ [bk, bn] -> [1, bn]
+    acc_ref[...] += jnp.dot(x_ref[...], w_ref[0],
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(2) == nk - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bn", "bk", "interpret"))
+def coalesced_gemv(x: jax.Array, w: jax.Array, *, bn: int = 128,
+                   bk: int = 512, interpret: bool = True) -> jax.Array:
+    """x: [G, K] packed vectors; w: [G, K, N] per-problem weights -> [G, N]."""
+    G, K = x.shape
+    G2, K2, N = w.shape
+    assert (G, K) == (G2, K2)
+    bn = min(bn, N)
+    bk = min(bk, K)
+    assert N % bn == 0 and K % bk == 0, (N, bn, K, bk)
+    nk = K // bk
+
+    return pl.pallas_call(
+        functools.partial(_kernel, nk=nk),
+        grid=(G, N // bn, nk),
+        in_specs=[
+            pl.BlockSpec((1, bk), lambda g, j, k: (g, k)),
+            pl.BlockSpec((1, bk, bn), lambda g, j, k: (g, k, j)),
+        ],
+        out_specs=pl.BlockSpec((1, bn), lambda g, j, k: (g, j)),
+        scratch_shapes=[pltpu.VMEM((1, bn), jnp.float32)],
+        out_shape=jax.ShapeDtypeStruct((G, N), x.dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(x, w)

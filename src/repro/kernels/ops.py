@@ -1,0 +1,135 @@
+"""jit'd wrappers + host-side packing for the Pallas superkernels.
+
+This is the layer the JIT engine (core/jit.py, serving/engine.py) calls:
+``execute_superkernel`` takes a planned group of (activation, weight)
+problems, pads them to the cluster envelope, packs, dispatches the right
+Pallas kernel, and unpacks per-problem results.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.coalesced_gemm import coalesced_gemm
+from repro.kernels.coalesced_gemv import coalesced_gemv
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels import ref
+
+# On this container Pallas executes in interpret mode (CPU); on a real TPU
+# deployment set REPRO_PALLAS_INTERPRET=0.
+import os
+INTERPRET = os.environ.get("REPRO_PALLAS_INTERPRET", "1") != "0"
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+@dataclasses.dataclass
+class PackedGroup:
+    """Host-side packing metadata for one superkernel dispatch."""
+    a_packed: jax.Array           # [M_pad, K_pad]
+    b_stacked: jax.Array          # [G, K_pad, N_pad]
+    group_ids: jax.Array          # [M_pad // bm]
+    row_slices: List[Tuple[int, int]]   # (start, real_m) per problem
+    n_real: List[int]
+    bm: int
+
+
+def pack_problems(problems: Sequence[Tuple[jax.Array, jax.Array]], *,
+                  bm: int = 128) -> PackedGroup:
+    """Pad G (a [m,k], b [k,n]) problems to a common (K, N) envelope and
+    concatenate the a's along m (per-problem m padded to a ``bm`` multiple)."""
+    K = max(int(a.shape[1]) for a, _ in problems)
+    N = max(int(b.shape[1]) for _, b in problems)
+    K = _round_up(K, 128)
+    N = _round_up(N, 128)
+    a_parts, b_parts, gids, rows, n_real = [], [], [], [], []
+    start = 0
+    for g, (a, b) in enumerate(problems):
+        m, k = a.shape
+        m_pad = _round_up(m, bm)
+        a_parts.append(jnp.pad(a, ((0, m_pad - m), (0, K - k))))
+        b_parts.append(jnp.pad(b, ((0, K - b.shape[0]), (0, N - b.shape[1]))))
+        gids.extend([g] * (m_pad // bm))
+        rows.append((start, m))
+        n_real.append(int(b.shape[1]))
+        start += m_pad
+    return PackedGroup(
+        a_packed=jnp.concatenate(a_parts, axis=0),
+        b_stacked=jnp.stack(b_parts, axis=0),
+        group_ids=jnp.asarray(gids, jnp.int32),
+        row_slices=rows, n_real=n_real, bm=bm)
+
+
+def execute_superkernel(problems: Sequence[Tuple[jax.Array, jax.Array]], *,
+                        bm: int = 128, bn: int = 128, bk: int = 512,
+                        shared_operand: bool = False,
+                        interpret: bool | None = None) -> List[jax.Array]:
+    """Coalesce and execute G GEMM problems; returns per-problem outputs.
+
+    shared_operand=True (all problems share one weight matrix — the RNN/
+    decode lockstep case) concatenates activations into a single GEMM so the
+    weights stream through VMEM once.
+    """
+    interpret = INTERPRET if interpret is None else interpret
+    if shared_operand:
+        b = problems[0][1]
+        ms = [int(a.shape[0]) for a, _ in problems]
+        x = jnp.concatenate([a for a, _ in problems], axis=0)
+        m_pad = _round_up(x.shape[0], bm)
+        k_pad = _round_up(b.shape[0], 128)
+        n_pad = _round_up(b.shape[1], 128)
+        xp = jnp.pad(x, ((0, m_pad - x.shape[0]), (0, k_pad - x.shape[1])))
+        bp = jnp.pad(b, ((0, k_pad - b.shape[0]), (0, n_pad - b.shape[1])))
+        out = coalesced_gemm(
+            xp, bp[None], jnp.zeros((m_pad // bm,), jnp.int32),
+            bm=bm, bn=min(bn, n_pad), bk=min(bk, k_pad), interpret=interpret)
+        outs, s = [], 0
+        for m in ms:
+            outs.append(out[s:s + m, :b.shape[1]])
+            s += m
+        return outs
+    packed = pack_problems(problems, bm=bm)
+    out = coalesced_gemm(packed.a_packed, packed.b_stacked, packed.group_ids,
+                         bm=bm, bn=min(bn, packed.b_stacked.shape[-1]),
+                         bk=min(bk, packed.b_stacked.shape[1]),
+                         interpret=interpret)
+    return [out[s:s + m, :n] for (s, m), n in
+            zip(packed.row_slices, packed.n_real)]
+
+
+def coalesced_matvec(xs: Sequence[jax.Array], ws: Sequence[jax.Array], *,
+                     interpret: bool | None = None) -> List[jax.Array]:
+    """G matvecs (x [k], w [k, n]). Dispatches the shared-weight GEMM path
+    when every problem uses the same weight array."""
+    interpret = INTERPRET if interpret is None else interpret
+    shared = all(w is ws[0] for w in ws)
+    if shared:
+        outs = execute_superkernel(
+            [(x[None, :], ws[0]) for x in xs], bm=8,
+            shared_operand=True, interpret=interpret)
+        return [o[0] for o in outs]
+    K = _round_up(max(int(w.shape[0]) for w in ws), 128)
+    N = _round_up(max(int(w.shape[1]) for w in ws), 128)
+    xp = jnp.stack([jnp.pad(x, (0, K - x.shape[0])) for x in xs])
+    wp = jnp.stack([jnp.pad(w, ((0, K - w.shape[0]), (0, N - w.shape[1])))
+                    for w in ws])
+    out = coalesced_gemv(xp, wp, bn=128, bk=min(512, K), interpret=interpret)
+    return [out[i, :int(w.shape[1])] for i, w in enumerate(ws)]
+
+
+def windowed_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                       causal: bool = True, window: int = 0,
+                       interpret: bool | None = None) -> jax.Array:
+    """[B, H, S, D] flash attention via the Pallas kernel (flattens B×H)."""
+    interpret = INTERPRET if interpret is None else interpret
+    B, H, S, D = q.shape
+    out = flash_attention(q.reshape(B * H, S, D), k.reshape(B * H, S, D),
+                          v.reshape(B * H, S, D), causal=causal,
+                          window=window, interpret=interpret)
+    return out.reshape(B, H, S, D)

@@ -1,0 +1,50 @@
+"""Pure-jnp oracles for every Pallas kernel in this package."""
+from __future__ import annotations
+
+from typing import List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def coalesced_gemm_ref(a_packed: jax.Array, b_stacked: jax.Array,
+                       group_ids: jax.Array, bm: int) -> jax.Array:
+    """Reference for the grouped superkernel.
+
+    a_packed: [M_pad, K] — problems concatenated along m (each problem's rows
+    padded to a multiple of ``bm``); b_stacked: [G, K, N]; group_ids:
+    [M_pad // bm] int32 mapping each m-tile to its problem.
+    """
+    M, K = a_packed.shape
+    tiles = a_packed.reshape(M // bm, bm, K)
+    b_per_tile = b_stacked[group_ids]                    # [T, K, N]
+    out = jnp.einsum("tmk,tkn->tmn", tiles, b_per_tile,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(M, b_stacked.shape[-1]).astype(a_packed.dtype)
+
+
+def coalesced_gemv_ref(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Batched matvec: x [G, K], w [G, K, N] -> [G, N]."""
+    return jnp.einsum("gk,gkn->gn", x, w,
+                      preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool = True, window: int = 0,
+                        scale: float | None = None) -> jax.Array:
+    """Dense attention oracle. q,k,v: [B, H, S, D] -> [B, H, S, D]."""
+    B, H, S, D = q.shape
+    scale = scale if scale is not None else 1.0 / (D ** 0.5)
+    logits = jnp.einsum("bhsd,bhtd->bhst", q, k,
+                        preferred_element_type=jnp.float32) * scale
+    rows = jnp.arange(S)[:, None]
+    cols = jnp.arange(S)[None, :]
+    ok = jnp.ones((S, S), bool)
+    if causal:
+        ok &= cols <= rows
+    if window > 0:
+        ok &= cols > rows - window
+    logits = jnp.where(ok[None, None], logits, -2.0e38)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhst,bhtd->bhsd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,207 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture × input shape ×
+mesh) with ShapeDtypeStruct stand-ins (no allocation).
+
+The two lines above MUST run before any jax import — jax locks the device
+count at first init. Do not set that flag globally; smoke tests and benches
+must see one device.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch yi-9b --shape train_4k --mesh single
+  PYTHONPATH=src python -m repro.launch.dryrun --all            # full sweep
+Results land in experiments/dryrun/<arch>__<shape>__<mesh>.json (resumable).
+"""
+import argparse
+import json
+import time
+import traceback
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_IDS, INPUT_SHAPES, get_config, \
+    pair_is_supported
+from repro.distributed.hints import activation_sharding
+from repro.distributed.sharding import (batch_shardings, cache_shardings,
+                                        fsdp_axes, opt_state_shardings,
+                                        param_shardings)
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.launch.hlo_analysis import model_flops_for, roofline
+from repro.launch.hlo_parse import analyze_hlo
+from repro.launch.mesh import make_production_mesh
+from repro.models.model import Model
+from repro.training.optimizer import OptimizerConfig, init_opt_state
+from repro.training.train_loop import make_train_step
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "experiments", "dryrun")
+
+
+def _result_path(arch: str, shape: str, mesh_name: str, tag: str = "") -> str:
+    suffix = f"__{tag}" if tag else ""
+    return os.path.abspath(os.path.join(
+        OUT_DIR, f"{arch}__{shape}__{mesh_name}{suffix}.json"))
+
+
+def dryrun_one(arch: str, shape_name: str, multi_pod: bool,
+               verbose: bool = True) -> Dict[str, Any]:
+    """Lower + compile one (arch, shape, mesh); return the roofline record."""
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.devices.size
+    model = Model(cfg, param_dtype=jnp.bfloat16, remat=(shape.kind == "train"))
+    rng = jax.random.PRNGKey(0)
+
+    dp = fsdp_axes(mesh)
+    bspec = dp if shape.global_batch % (
+        2 * 16 if multi_pod else 16) == 0 else None
+    hints = {"btd": NamedSharding(mesh, P(bspec, None, None))}
+    if cfg.has_moe:
+        # GShard grouped dispatch (§Perf G2): one token group per data shard
+        hints["moe_groups"] = 32 if multi_pod else 16
+        hints["moe_tokens"] = NamedSharding(mesh, P(dp, None, None))
+        if cfg.moe.num_experts % (2 * 16 if multi_pod else 16) != 0:
+            # grok-style MoE (not expert-parallel): force ZeRO-3 weight
+            # gathering instead of activation all-reduce (§Perf G1); buffer
+            # stays group-local.
+            hints["moe_w_col"] = NamedSharding(mesh, P(None, None, "model"))
+            hints["moe_w_row"] = NamedSharding(mesh, P(None, "model", None))
+            hints["moe_buf"] = NamedSharding(mesh, P(dp, None, None, None))
+
+    t0 = time.perf_counter()
+    with mesh, activation_sharding(hints):
+        p_sh = param_shardings(model, mesh, rng)
+        p_shape = jax.eval_shape(model.init, rng)
+        in_specs = model.input_specs(shape)
+        b_sh = batch_shardings(model, shape, mesh)
+
+        if shape.kind == "train":
+            opt_sh = opt_state_shardings(p_sh, mesh)
+            opt_shape = jax.eval_shape(init_opt_state, p_shape)
+            step = make_train_step(model, OptimizerConfig())
+            jitted = jax.jit(step, in_shardings=(p_sh, opt_sh, b_sh),
+                             out_shardings=(p_sh, opt_sh, None),
+                             donate_argnums=(0, 1))
+            lowered = jitted.lower(p_shape, opt_shape, in_specs)
+        elif shape.kind == "prefill":
+            def prefill_step(params, batch):
+                return model.prefill(params, batch, cache_len=shape.seq_len)
+
+            jitted = jax.jit(prefill_step, in_shardings=(p_sh, b_sh))
+            lowered = jitted.lower(p_shape, in_specs)
+        else:  # decode
+            cache_shape = in_specs["cache"]
+            c_sh = cache_shardings(model, cache_shape, mesh, shape)
+            tok_sh = b_sh["tokens"] if "tokens" in b_sh else None
+
+            def serve_step(params, tokens, cache):
+                return model.decode_step(params, tokens, cache)
+
+            jitted = jax.jit(serve_step,
+                             in_shardings=(p_sh, tok_sh, c_sh),
+                             out_shardings=(None, c_sh),
+                             donate_argnums=(2,))
+            lowered = jitted.lower(p_shape, in_specs["tokens"], cache_shape)
+
+        t_lower = time.perf_counter() - t0
+        compiled = lowered.compile()
+        t_compile = time.perf_counter() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0]
+    hlo = compiled.as_text()
+    # trip-count-aware HLO accounting (XLA's cost_analysis counts while
+    # bodies once — see launch/hlo_parse.py); all quantities are per-chip.
+    totals = analyze_hlo(hlo)
+    coll = {k: v for k, v in totals.per_collective.items() if v}
+    flops = totals.flops
+    bytes_ = totals.bytes
+    mf = model_flops_for(cfg, shape) / chips  # per-chip useful flops
+    terms = roofline(flops, bytes_, totals.collective_bytes, chips,
+                     model_flops=mf)
+
+    record = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "multi" if multi_pod else "single", "chips": chips,
+        "kind": shape.kind,
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "memory": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "peak_bytes": getattr(mem, "peak_memory_in_bytes", None),
+        },
+        "collectives": coll,
+        "roofline": terms.as_dict(),
+        "xla_cost_analysis_raw": {
+            "flops": float(cost.get("flops", 0.0)),
+            "bytes_accessed": float(cost.get("bytes accessed", 0.0)),
+        },
+    }
+    if verbose:
+        print(f"[{arch} × {shape_name} × "
+              f"{'multi' if multi_pod else 'single'}] "
+              f"compile={t_compile:.1f}s flops/chip={flops:.3e} "
+              f"bytes/chip={bytes_:.3e} coll={sum(coll.values()):.3e}B "
+              f"dominant={terms.dominant}")
+        print(f"  memory_analysis: args={record['memory']['argument_bytes']} "
+              f"temp={record['memory']['temp_bytes']} "
+              f"peak={record['memory']['peak_bytes']}")
+    return record
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=list(ARCH_IDS))
+    ap.add_argument("--shape", choices=list(INPUT_SHAPES))
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="single")
+    ap.add_argument("--all", action="store_true",
+                    help="sweep every supported (arch, shape, mesh)")
+    ap.add_argument("--force", action="store_true",
+                    help="recompute existing results")
+    ap.add_argument("--tag", default="", help="variant tag for perf runs")
+    args = ap.parse_args()
+
+    os.makedirs(OUT_DIR, exist_ok=True)
+    if args.all:
+        combos = [(a, s, m)
+                  for a in ARCH_IDS
+                  for s in INPUT_SHAPES
+                  for m in ("single", "multi")
+                  if pair_is_supported(a, s)]
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+        combos = [(args.arch, args.shape, m) for m in meshes]
+
+    failures = []
+    for arch, shape, mesh_name in combos:
+        path = _result_path(arch, shape, mesh_name, args.tag)
+        if os.path.exists(path) and not args.force:
+            print(f"skip (cached): {os.path.basename(path)}")
+            continue
+        try:
+            rec = dryrun_one(arch, shape, mesh_name == "multi")
+            with open(path, "w") as f:
+                json.dump(rec, f, indent=1)
+        except Exception as e:  # noqa: BLE001 — record and continue sweep
+            print(f"FAIL {arch} {shape} {mesh_name}: {e}")
+            traceback.print_exc()
+            failures.append((arch, shape, mesh_name, str(e)))
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for f in failures:
+            print("  ", f)
+        raise SystemExit(1)
+    print("\nall dry-runs OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,108 @@
+"""Distributed training launcher.
+
+Smoke mode (default, CPU-friendly): reduced config of the selected
+architecture on a 1×1 host mesh, real optimization steps on the synthetic
+LM pipeline, with checkpointing.
+
+Production mode (``--production``, requires a real TPU slice or the
+512-device dry-run flag): builds the 16×16 (or 2×16×16 with --multi-pod)
+mesh, shards params/optimizer/batch with the rules in
+distributed/sharding.py, and runs the same jitted train step under pjit.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.train --arch gemma3-1b --steps 100
+  PYTHONPATH=src python -m repro.launch.train --arch yi-9b --production \
+      --multi-pod --steps 2          # on a pod slice
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCH_IDS, get_config, smoke_config
+from repro.distributed.hints import activation_sharding
+from repro.distributed.sharding import (batch_shardings, fsdp_axes,
+                                        opt_state_shardings, param_shardings)
+from repro.configs.base import InputShape
+from repro.launch.mesh import make_host_mesh, make_production_mesh
+from repro.models.model import Model
+from repro.training import (DataConfig, OptimizerConfig, SyntheticLM,
+                            init_opt_state, make_train_step, save_checkpoint)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=list(ARCH_IDS), default="gemma3-1b")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch-size", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--production", action="store_true",
+                    help="full config on the production mesh (TPU slice)")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--checkpoint", default="")
+    args = ap.parse_args()
+
+    if args.production:
+        cfg = get_config(args.arch)
+        mesh = make_production_mesh(multi_pod=args.multi_pod)
+        dtype = jnp.bfloat16
+    else:
+        cfg = smoke_config(args.arch)
+        mesh = make_host_mesh()
+        dtype = jnp.float32
+    model = Model(cfg, param_dtype=dtype, remat=args.production)
+    rng = jax.random.PRNGKey(0)
+    opt_cfg = OptimizerConfig(lr=args.lr, warmup_steps=max(args.steps // 10, 1),
+                              total_steps=args.steps)
+    data = SyntheticLM(cfg, DataConfig(batch_size=args.batch_size,
+                                       seq_len=args.seq_len))
+    shape = InputShape("cli", args.seq_len, args.batch_size, "train")
+
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    dp = fsdp_axes(mesh)
+    bspec = dp if args.batch_size % np.prod(
+        [mesh.shape[a] for a in dp]) == 0 else None
+    hints = {"btd": NamedSharding(mesh, P(bspec, None, None))}
+    if cfg.has_moe:
+        hints["moe_groups"] = int(np.prod([mesh.shape[a] for a in dp]))
+        hints["moe_tokens"] = NamedSharding(mesh, P(bspec, None, None))
+
+    with mesh, activation_sharding(hints):
+        p_sh = param_shardings(model, mesh, rng)
+        params = jax.jit(model.init, out_shardings=p_sh)(rng)
+        opt_sh = opt_state_shardings(p_sh, mesh)
+        opt_state = jax.jit(init_opt_state, out_shardings=opt_sh)(params)
+        b_sh = batch_shardings(model, shape, mesh)
+        step = jax.jit(make_train_step(model, opt_cfg),
+                       in_shardings=(p_sh, opt_sh, b_sh),
+                       out_shardings=(p_sh, opt_sh, None),
+                       donate_argnums=(0, 1))
+        n_params = sum(np.prod(l.shape) for l in
+                       jax.tree_util.tree_leaves(params))
+        print(f"arch={cfg.name} params={n_params/1e6:.1f}M "
+              f"mesh={dict(mesh.shape)} dtype={dtype.__name__}")
+        it = iter(data)
+        t0 = time.perf_counter()
+        for s in range(1, args.steps + 1):
+            batch = {k: jnp.asarray(v) for k, v in next(it).items()}
+            params, opt_state, metrics = step(params, opt_state, batch)
+            if s % max(args.steps // 10, 1) == 0 or s == 1:
+                print(f"step {s:5d} loss {float(metrics['loss']):.4f} "
+                      f"lr {float(metrics['lr']):.2e}")
+        wall = time.perf_counter() - t0
+        print(f"{args.steps} steps in {wall:.1f}s "
+              f"({wall/args.steps*1e3:.0f} ms/step host wall)")
+        if args.checkpoint:
+            save_checkpoint(args.checkpoint,
+                            {"params": params, "opt": opt_state},
+                            step=args.steps)
+            print(f"checkpoint: {args.checkpoint}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,114 @@
+"""Shared neural-net building blocks (pure JAX, functional).
+
+Conventions used throughout the model zoo:
+  * params are plain dict pytrees of jnp arrays;
+  * per-layer params are STACKED on a leading layer axis and consumed with
+    ``jax.lax.scan`` so HLO size / compile time is O(1) in depth;
+  * matmuls run in the param dtype (bf16 by default), reductions
+    (norms, softmax, losses) in fp32.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# initializers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, shape, dtype, scale: float = 1.0):
+    """Truncated-normal fan-in init (stddev = scale / sqrt(fan_in))."""
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    std = scale / math.sqrt(fan_in)
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32) * std).astype(dtype)
+
+
+def embed_init(key, shape, dtype):
+    return (jax.random.normal(key, shape, jnp.float32) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x: jax.Array, gamma: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    scale = jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    return ((xf * scale) * (1.0 + gamma.astype(jnp.float32))).astype(x.dtype)
+
+
+def init_rmsnorm(d: int, dtype) -> jax.Array:
+    # stored as the deviation from 1.0 (gemma convention); init to zeros.
+    return jnp.zeros((d,), dtype)
+
+
+# ---------------------------------------------------------------------------
+# rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: [..., seq, heads, head_dim]; positions: broadcastable to [..., seq]."""
+    head_dim = x.shape[-1]
+    freqs = rope_frequencies(head_dim, theta)  # [half]
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [..., seq, half]
+    cos = jnp.cos(angles)[..., None, :]  # [..., seq, 1, half]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(seq_len: int, d_model: int) -> jax.Array:
+    """Whisper-style fixed sinusoidal position embeddings [seq, d_model]."""
+    half = d_model // 2
+    pos = jnp.arange(seq_len, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(half, dtype=jnp.float32)[None, :]
+    inv = jnp.exp(-math.log(10000.0) * dim / max(half - 1, 1))
+    ang = pos * inv
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# MLP (SwiGLU)
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, d_model: int, d_ff: int, dtype) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(k1, (d_model, d_ff), dtype),
+        "w_up": dense_init(k2, (d_model, d_ff), dtype),
+        "w_down": dense_init(k3, (d_ff, d_model), dtype),
+    }
+
+
+def mlp(params: Params, x: jax.Array) -> jax.Array:
+    gate = jax.nn.silu(x @ params["w_gate"])
+    up = x @ params["w_up"]
+    return (gate * up) @ params["w_down"]
+
+
+# ---------------------------------------------------------------------------
+# losses
+# ---------------------------------------------------------------------------
+
+def softmax_cross_entropy(logits: jax.Array, labels: jax.Array, mask=None) -> jax.Array:
+    """Mean next-token CE in fp32. logits [..., V], labels int [...]."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is None:
+        return jnp.mean(nll)
+    mask = mask.astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)

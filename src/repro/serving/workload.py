@@ -1,0 +1,65 @@
+"""Synthetic serving workloads: tenants, arrival processes, request traces."""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+from repro.configs.base import ModelConfig
+
+
+@dataclasses.dataclass
+class ServeRequest:
+    req_id: int
+    tenant: str
+    arrival_t: float
+    prompt_len: int
+    max_new_tokens: int
+    slo_s: float
+    # filled by the engine:
+    finish_t: float = float("nan")
+    tokens_out: Optional[List[int]] = None
+
+    @property
+    def latency(self) -> float:
+        return self.finish_t - self.arrival_t
+
+    @property
+    def met_slo(self) -> bool:
+        return self.latency <= self.slo_s
+
+
+def poisson_arrivals(rate_hz: float, n: int, rng: np.random.Generator,
+                     start_t: float = 0.0) -> List[float]:
+    gaps = rng.exponential(1.0 / rate_hz, size=n)
+    return list(start_t + np.cumsum(gaps))
+
+
+def bursty_arrivals(rate_hz: float, n: int, rng: np.random.Generator,
+                    burst_factor: float = 5.0, p_burst: float = 0.2
+                    ) -> List[float]:
+    """MMPP-ish: occasional bursts at ``burst_factor``× the base rate —
+    the paper's 'bursty arrival processes' (§7)."""
+    out, t = [], 0.0
+    for _ in range(n):
+        r = rate_hz * (burst_factor if rng.random() < p_burst else 1.0)
+        t += rng.exponential(1.0 / r)
+        out.append(t)
+    return out
+
+
+def make_trace(tenants: Sequence[str], rate_hz: float, n_per_tenant: int,
+               *, prompt_len: int = 32, max_new_tokens: int = 8,
+               slo_s: float = 0.2, seed: int = 0, bursty: bool = False
+               ) -> List[ServeRequest]:
+    rng = np.random.default_rng(seed)
+    reqs: List[ServeRequest] = []
+    rid = 0
+    for name in tenants:
+        arr_fn = bursty_arrivals if bursty else poisson_arrivals
+        for t in arr_fn(rate_hz, n_per_tenant, rng):
+            reqs.append(ServeRequest(rid, name, float(t), prompt_len,
+                                     max_new_tokens, slo_s))
+            rid += 1
+    return sorted(reqs, key=lambda r: r.arrival_t)

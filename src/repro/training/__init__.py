@@ -1,0 +1,12 @@
+from repro.training.checkpoint import (checkpoint_step, restore_checkpoint,
+                                       save_checkpoint)
+from repro.training.data import DataConfig, SyntheticLM
+from repro.training.optimizer import (OptimizerConfig, OptState, adamw_update,
+                                      init_opt_state, lr_at)
+from repro.training.train_loop import make_train_step, train
+
+__all__ = [
+    "DataConfig", "OptState", "OptimizerConfig", "SyntheticLM",
+    "adamw_update", "checkpoint_step", "init_opt_state", "lr_at",
+    "make_train_step", "restore_checkpoint", "save_checkpoint", "train",
+]

@@ -1,0 +1,70 @@
+"""Sharding-aware checkpointing to flat .npz archives.
+
+Leaves are keyed by their tree path; restore rebuilds the pytree against a
+reference structure and (optionally) ``jax.device_put``s each leaf with the
+target NamedSharding — so a checkpoint written on one mesh restores onto
+another (the multi-pod resize path).
+"""
+from __future__ import annotations
+
+import os
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+def _path_key(p) -> str:
+    for attr in ("key", "name", "idx"):
+        if hasattr(p, attr):
+            return str(getattr(p, attr))
+    return str(p)
+
+
+def _flatten(tree: Any):
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        out["/".join(_path_key(p) for p in path)] = np.asarray(leaf)
+    return out
+
+
+def save_checkpoint(path: str, tree: Any, step: Optional[int] = None) -> str:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    payload = _flatten(tree)
+    if step is not None:
+        payload["__step__"] = np.asarray(step)
+    tmp = path + ".tmp"
+    np.savez(tmp, **payload)
+    os.replace(tmp + ".npz" if not tmp.endswith(".npz") else tmp, path)
+    return path
+
+
+def restore_checkpoint(path: str, reference: Any,
+                       shardings: Optional[Any] = None) -> Any:
+    """Restore into the structure of ``reference`` (shapes must match).
+
+    ``shardings``: optional pytree (same structure) of NamedSharding to
+    place each leaf on restore.
+    """
+    with np.load(path) as data:
+        flat, treedef = jax.tree_util.tree_flatten_with_path(reference)
+        leaves = []
+        for pathk, ref_leaf in flat:
+            key = "/".join(_path_key(p) for p in pathk)
+            arr = data[key]
+            assert arr.shape == tuple(ref_leaf.shape), (key, arr.shape,
+                                                        ref_leaf.shape)
+            leaves.append(arr.astype(ref_leaf.dtype))
+    tree = jax.tree_util.tree_unflatten(treedef, leaves)
+    if shardings is not None:
+        tree = jax.tree_util.tree_map(
+            lambda x, s: jax.device_put(x, s), tree, shardings)
+    return tree
+
+
+def checkpoint_step(path: str) -> Optional[int]:
+    with np.load(path) as data:
+        if "__step__" in data:
+            return int(data["__step__"])
+    return None

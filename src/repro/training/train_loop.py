@@ -1,0 +1,65 @@
+"""Training loop: jitted step builder + driver.
+
+``make_train_step`` returns a pure (params, opt_state, batch) -> updated
+function suitable both for single-device smoke training and for pjit
+lowering in the multi-pod dry-run (launch/dryrun.py passes in_shardings).
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Callable, Dict, Iterable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model import Model
+from repro.training.checkpoint import save_checkpoint
+from repro.training.optimizer import (OptimizerConfig, OptState, adamw_update,
+                                      init_opt_state)
+
+
+def make_train_step(model: Model, opt_cfg: OptimizerConfig
+                    ) -> Callable[[Any, OptState, Dict[str, jax.Array]],
+                                  Tuple[Any, OptState, Dict[str, jax.Array]]]:
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(model.loss)(params, batch)
+        params, opt_state, metrics = adamw_update(opt_cfg, params, grads,
+                                                  opt_state)
+        metrics = dict(metrics, loss=loss)
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def train(model: Model, data: Iterable[Dict[str, Any]], steps: int, *,
+          opt_cfg: Optional[OptimizerConfig] = None,
+          rng: Optional[jax.Array] = None,
+          log_every: int = 10,
+          checkpoint_path: Optional[str] = None,
+          checkpoint_every: int = 0,
+          log_fn: Callable[[str], None] = print) -> Dict[str, Any]:
+    """Smoke-scale training driver (single host)."""
+    opt_cfg = opt_cfg or OptimizerConfig(total_steps=steps)
+    rng = rng if rng is not None else jax.random.PRNGKey(0)
+    params = model.init(rng)
+    opt_state = init_opt_state(params)
+    step_fn = jax.jit(make_train_step(model, opt_cfg), donate_argnums=(0, 1))
+
+    it = iter(data)
+    losses = []
+    t0 = time.perf_counter()
+    for step in range(1, steps + 1):
+        batch = {k: jnp.asarray(v) for k, v in next(it).items()}
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        losses.append(float(metrics["loss"]))
+        if log_every and step % log_every == 0:
+            log_fn(f"step {step:5d} loss {losses[-1]:.4f} "
+                   f"lr {float(metrics['lr']):.2e} "
+                   f"gnorm {float(metrics['grad_norm']):.2f}")
+        if checkpoint_path and checkpoint_every \
+                and step % checkpoint_every == 0:
+            save_checkpoint(checkpoint_path,
+                            {"params": params, "opt": opt_state}, step=step)
+    wall = time.perf_counter() - t0
+    return {"params": params, "opt_state": opt_state, "losses": losses,
+            "wall_s": wall}

@@ -1,0 +1,10 @@
+import jax
+import pytest
+
+# NOTE: never set --xla_force_host_platform_device_count here — smoke tests
+# and benches must see ONE device; only launch/dryrun.py uses 512.
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)

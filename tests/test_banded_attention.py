@@ -1,0 +1,68 @@
+"""Banded sliding-window attention (§Perf W1) must equal the masked-full
+formulation on both the chunked prefill path and the decode path (including
+mixed per-row positions)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import attention as A
+
+
+@pytest.mark.parametrize("is_global", [False, True])
+def test_chunked_banded_matches_masked(is_global, rng, monkeypatch):
+    B, S, H, Hkv, hd = 1, 4096, 2, 1, 16
+    window = 256
+    d = H * hd
+    params = A.init_attention(rng, d, H, Hkv, hd, jnp.float32)
+    x = 0.3 * jax.random.normal(rng, (B, S, d))
+    kw = dict(num_heads=H, num_kv_heads=Hkv, head_dim=hd, rope_theta=1e4,
+              is_global=is_global, window=window)
+    out_banded = A.attention_full(params, x, **kw)      # cond path (S=4096)
+    # force the masked fallback by making the band as wide as S
+    monkeypatch.setattr(A, "Q_CHUNK", S)                # Wlen = S+window >= S
+    out_masked = A.attention_full(params, x, **kw)
+    np.testing.assert_allclose(out_banded, out_masked, rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("is_global", [False, True])
+def test_decode_banded_matches_masked_mixed_positions(is_global, rng):
+    B, S, H, Hkv, hd = 3, 128, 2, 1, 16
+    window = 32
+    d = H * hd
+    params = A.init_attention(rng, d, H, Hkv, hd, jnp.float32)
+    x = 0.3 * jax.random.normal(rng, (B, 1, d))
+    kc = 0.3 * jax.random.normal(jax.random.fold_in(rng, 1), (B, Hkv, S, hd))
+    vc = 0.3 * jax.random.normal(jax.random.fold_in(rng, 2), (B, Hkv, S, hd))
+    pos = jnp.asarray([5, 60, 120])       # mixed depths (continuous batching)
+    kw = dict(num_heads=H, num_kv_heads=Hkv, head_dim=hd, rope_theta=1e4,
+              is_global=is_global)
+    y_banded, _, _ = A.attention_decode(params, x, kc, vc, pos,
+                                        window=window, **kw)
+    # reference: masked-full via window >= S disables the banded branch but
+    # keeps the locality mask -> emulate by huge cache? Instead compute the
+    # oracle directly.
+    def oracle():
+        q = (x @ params["wq"]).reshape(B, 1, H, hd)
+        k = (x @ params["wk"]).reshape(B, 1, Hkv, hd)
+        v = (x @ params["wv"]).reshape(B, 1, Hkv, hd)
+        from repro.models.layers import apply_rope
+        q = apply_rope(q, pos[:, None], 1e4)
+        k = apply_rope(k, pos[:, None], 1e4)
+        write = (jnp.arange(S)[None, :] == pos[:, None])
+        kcc = jnp.where(write[:, None, :, None], k.transpose(0, 2, 1, 3), kc)
+        vcc = jnp.where(write[:, None, :, None], v.transpose(0, 2, 1, 3), vc)
+        G = H // Hkv
+        qg = q.reshape(B, 1, Hkv, G, hd)
+        s = jnp.einsum("bshgd,bhtd->bhgst", qg, kcc) / jnp.sqrt(
+            jnp.float32(hd))
+        idx = jnp.arange(S)
+        ok = idx[None, :] <= pos[:, None]
+        if not is_global:
+            ok &= idx[None, :] > (pos[:, None] - window)
+        s = jnp.where(ok[:, None, None, None, :], s, -2.0e38)
+        p = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bhgst,bhtd->bshgd", p, vcc)
+        return (o.reshape(B, 1, H * hd) @ params["wo"])
+
+    np.testing.assert_allclose(y_banded, oracle(), rtol=2e-4, atol=2e-4)

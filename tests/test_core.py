@@ -1,0 +1,207 @@
+"""Unit + property tests for the paper's core: cost model, clustering,
+coalescer, autotuner, OoO scheduler, simulator."""
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (Autotuner, BlockConfig, Coalescer, CostModel,
+                        GemmShape, OoOScheduler, SchedulerConfig, TPUV5E,
+                        V100, cluster_greedy, make_op, make_requests,
+                        simulate_space_mux, simulate_time_mux, simulate_vliw,
+                        stream_program, zoo_population)
+from repro.configs import REGISTRY, get_config
+
+CM = CostModel(V100)
+
+
+# ---------------------------------------------------------------------------
+# cost model
+# ---------------------------------------------------------------------------
+
+def test_gemm_time_positive_and_monotone_in_m():
+    s1 = GemmShape(64, 1024, 1024)
+    s2 = GemmShape(1024, 1024, 1024)
+    assert 0 < CM.gemm_time(s1) <= CM.gemm_time(s2)
+
+
+def test_coalescing_beats_time_multiplexing_for_small_gemms():
+    s = GemmShape(m=784, n=128, k=1152, dtype_bytes=4)
+    group = [s] * 8
+    assert CM.time_multiplexed(group) / CM.coalesced_time(group) > 3.0
+
+
+def test_paper_fig6_magnitudes():
+    """Paper Fig. 6: 7.71x over time-slicing, 3.23x over Hyper-Q for a
+    conv2_2-like SGEMM population. The calibrated model reproduces the
+    magnitudes within 15%."""
+    s = GemmShape(m=784, n=128, k=1152, dtype_bytes=4)
+    group = [s] * 8
+    t_c = CM.coalesced_time(group)
+    assert CM.time_multiplexed(group) / t_c == pytest.approx(7.71, rel=0.15)
+    assert CM.space_multiplexed(group) / t_c == pytest.approx(3.23, rel=0.15)
+
+
+def test_paper_table1_direction():
+    """Collaborative-tuned kernels beat greedy under co-tenancy (~1.25x)
+    while paying an isolated-run regression (paper: 'small (20%)'; our
+    model's occupancy story yields a larger one — see EXPERIMENTS.md)."""
+    at = Autotuner(CM)
+    r = at.tune(GemmShape(784, 512, 1152, dtype_bytes=4), co_tenants=2)
+    assert 1.1 < r.multiplexed_speedup < 1.5
+    assert 0.0 < r.isolated_regression < 0.8
+    assert r.greedy != r.collaborative
+
+
+def test_gemv_shared_coalescing_speedup():
+    """Paper §5.3: coalescing RNN matvecs gives >2x over time-slicing."""
+    coal = Coalescer(CM)
+    g = GemmShape(m=1, n=4096, k=2048, dtype_bytes=4)
+    ops = [make_op(i, "gemv", g, tag="x", model_id="lstm", seq_index=0)
+           for i in range(3)]
+    plan = coal.plan(ops)
+    assert plan.shared_operand
+    t_serial = CM.time_multiplexed([g] * 3, plan.block)
+    assert t_serial / plan.est_time_s > 2.0
+
+
+@settings(deadline=None, max_examples=30)
+@given(m=st.integers(1, 2048), n=st.sampled_from([128, 512, 4096]),
+       k=st.sampled_from([256, 1024, 4096]),
+       g=st.integers(1, 16))
+def test_property_coalescing_never_slower_than_serial(m, n, k, g):
+    """Invariant: a zero-padding coalesced superkernel never loses to
+    time-multiplexing the same work (launch amortization + packing)."""
+    s = GemmShape(m, n, k)
+    coal = Coalescer(CM, max_group=64)
+    ops = [make_op(i, "gemm", s, tag="t", model_id=f"m{i}", seq_index=0)
+           for i in range(g)]
+    plan = coal.plan(ops)
+    assert plan.est_time_s <= CM.time_multiplexed([s] * g, plan.block) * 1.001
+
+
+# ---------------------------------------------------------------------------
+# clustering (Fig. 7)
+# ---------------------------------------------------------------------------
+
+def test_cluster_padding_waste_bound():
+    shapes = [GemmShape(1, n, k) for n, k in
+              [(4096, 1024), (4000, 1024), (512, 512), (520, 500),
+               (16384, 4096)]]
+    clusters = cluster_greedy(shapes, max_waste=0.25)
+    for c in clusters:
+        assert c.padding_waste <= 0.25
+    assert sum(len(c.members) for c in clusters) == len(shapes)
+
+
+def test_zoo_population_clusters():
+    """The 10-arch zoo's GEMM population concentrates into few clusters
+    (the paper's Fig. 7 observation)."""
+    rows = zoo_population(list(REGISTRY.values()), batch=1)
+    shapes = [s for _, _, s in rows]
+    clusters = cluster_greedy(shapes, max_waste=0.25)
+    assert len(clusters) < len(shapes) / 2.0
+
+
+@settings(deadline=None, max_examples=25)
+@given(st.lists(st.tuples(st.integers(64, 8192), st.integers(64, 8192)),
+                min_size=1, max_size=30))
+def test_property_clustering_conserves_ops(nks):
+    shapes = [GemmShape(1, n, k) for n, k in nks]
+    clusters = cluster_greedy(shapes)
+    assert sorted((s.n, s.k) for c in clusters for s in c.members) \
+        == sorted((s.n, s.k) for s in shapes)
+    for c in clusters:
+        assert 0.0 <= c.padding_waste <= 0.25 + 1e-9
+
+
+# ---------------------------------------------------------------------------
+# scheduler
+# ---------------------------------------------------------------------------
+
+def _ops(n, stream0=0, m=64, slo=1.0):
+    s = GemmShape(m, 512, 512)
+    return [make_op(stream0 + i, "gemm", s, arrival_t=0.0,
+                    deadline_t=slo, tag="t", model_id="m", seq_index=0)
+            for i in range(n)]
+
+
+def test_scheduler_drain_conserves_ops():
+    coal = Coalescer(CM)
+    sched = OoOScheduler(CM, coal)
+    ops = _ops(10)
+    sched.push(ops)
+    plans = sched.drain()
+    got = sorted(o.op_id for p in plans for o in p.ops)
+    assert got == sorted(o.op_id for o in ops)
+
+
+def test_scheduler_edf_priority():
+    """The most urgent op is always in the dispatched group."""
+    coal = Coalescer(CM)
+    sched = OoOScheduler(CM, coal, SchedulerConfig(max_group=2))
+    tight = make_op(0, "gemm", GemmShape(64, 512, 512), deadline_t=0.001)
+    loose = [make_op(i + 1, "gemm", GemmShape(64, 512, 512), deadline_t=10.0)
+             for i in range(5)]
+    sched.push(loose + [tight])
+    d = sched.decide(0.0)
+    assert d.kind == "dispatch"
+    assert tight in d.plan.ops
+
+
+def test_scheduler_waits_only_with_slack_and_arrivals():
+    coal = Coalescer(CM)
+    sched = OoOScheduler(CM, coal)
+    sched.push(_ops(1, slo=10.0))
+    sched.next_arrival_t = 1e-5   # an arrival is imminent
+    d = sched.decide(0.0)
+    assert d.kind == "wait" and d.wait_until <= 10.0
+    # without upcoming arrivals it must dispatch
+    sched.next_arrival_t = math.inf
+    d2 = sched.decide(0.0)
+    assert d2.kind == "dispatch"
+
+
+def test_scheduler_no_wait_past_latest_start():
+    coal = Coalescer(CM)
+    sched = OoOScheduler(CM, coal)
+    ops = _ops(1, slo=1e-9)       # already past latest start
+    sched.push(ops)
+    sched.next_arrival_t = 0.5
+    assert sched.decide(0.0).kind == "dispatch"
+
+
+@settings(deadline=None, max_examples=20)
+@given(n=st.integers(1, 40), m=st.sampled_from([1, 16, 256]))
+def test_property_drain_groups_bounded(n, m):
+    coal = Coalescer(CM, max_group=8)
+    sched = OoOScheduler(CM, coal)
+    sched.push(_ops(n, m=m))
+    plans = sched.drain()
+    assert all(1 <= p.num_problems <= 8 for p in plans)
+    assert sum(p.num_problems for p in plans) == n
+
+
+# ---------------------------------------------------------------------------
+# simulator
+# ---------------------------------------------------------------------------
+
+def test_simulator_policies_rank_as_paper_predicts():
+    cfg = get_config("gemma3-1b")
+    streams = [(cfg, 0.5, [i * 1e-4 for i in range(4)]) for _ in range(6)]
+    reqs = make_requests(streams, batch=16)
+    t = simulate_time_mux(reqs, CM)
+    v = simulate_vliw(reqs, CM)
+    assert v.throughput_rps > t.throughput_rps
+    assert v.utilization > t.utilization
+    assert set(v.latencies) == set(t.latencies)
+
+
+def test_stream_program_order_and_deadlines():
+    cfg = get_config("yi-9b")
+    ops = stream_program(cfg, 0, batch=1, arrival_t=1.0, slo_s=0.2)
+    assert ops[0].seq_index == 0
+    assert all(b.seq_index == a.seq_index + 1
+               for a, b in zip(ops, ops[1:]))
+    assert all(op.deadline_t == pytest.approx(1.2) for op in ops)
+    assert ops[-1].tag == "unembed"

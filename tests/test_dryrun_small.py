@@ -1,0 +1,51 @@
+"""Single-device lowering smoke: the exact dry-run step builders lower and
+compile on a 1×1 mesh with reduced configs — catches step/sharding wiring
+regressions without the 512-device flag (which tests must not set)."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import INPUT_SHAPES, smoke_config
+from repro.configs.base import InputShape
+from repro.distributed.sharding import (batch_shardings, cache_shardings,
+                                        param_shardings)
+from repro.launch.mesh import make_host_mesh
+from repro.models import Model
+from repro.training.optimizer import OptimizerConfig, init_opt_state
+from repro.training.train_loop import make_train_step
+
+
+SMALL_SHAPES = {
+    "train": InputShape("train_small", 64, 2, "train"),
+    "prefill": InputShape("prefill_small", 64, 2, "prefill"),
+    "decode": InputShape("decode_small", 64, 2, "decode"),
+}
+
+
+@pytest.mark.parametrize("arch", ["gemma3-1b", "grok-1-314b", "mamba2-2.7b",
+                                  "whisper-tiny"])
+@pytest.mark.parametrize("kind", ["train", "prefill", "decode"])
+def test_lower_compile_on_host_mesh(arch, kind, rng):
+    cfg = smoke_config(arch)
+    shape = SMALL_SHAPES[kind]
+    mesh = make_host_mesh()
+    model = Model(cfg, param_dtype=jnp.float32, remat=(kind == "train"))
+    with mesh:
+        p_sh = param_shardings(model, mesh, rng)
+        p_shape = jax.eval_shape(model.init, rng)
+        in_specs = model.input_specs(shape)
+        b_sh = batch_shardings(model, shape, mesh)
+        if kind == "train":
+            opt_shape = jax.eval_shape(init_opt_state, p_shape)
+            step = make_train_step(model, OptimizerConfig())
+            compiled = jax.jit(step).lower(p_shape, opt_shape,
+                                           in_specs).compile()
+        elif kind == "prefill":
+            compiled = jax.jit(
+                lambda p, b: model.prefill(p, b, cache_len=shape.seq_len)
+            ).lower(p_shape, in_specs).compile()
+        else:
+            c_sh = cache_shardings(model, in_specs["cache"], mesh, shape)
+            compiled = jax.jit(model.decode_step).lower(
+                p_shape, in_specs["tokens"], in_specs["cache"]).compile()
+    assert compiled.cost_analysis() is not None

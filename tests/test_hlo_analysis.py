@@ -1,0 +1,83 @@
+"""The trip-count-aware HLO analyzer: flops/bytes/collective accounting."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.launch.hlo_parse import analyze_hlo
+from repro.launch.hlo_analysis import model_flops_for, roofline
+from repro.configs import INPUT_SHAPES, get_config
+
+
+def test_scan_trip_count_flops():
+    def many(x, w):
+        def body(c, _):
+            return c @ w, None
+        y, _ = jax.lax.scan(body, x, None, length=10)
+        return y
+
+    x = jnp.zeros((128, 128))
+    w = jnp.zeros((128, 128))
+    c = jax.jit(many).lower(x, w).compile()
+    t = analyze_hlo(c.as_text())
+    assert t.flops == pytest.approx(10 * 2 * 128 ** 3)
+    # XLA's own analysis undercounts by the trip count (the reason this
+    # module exists)
+    assert c.cost_analysis()["flops"] == pytest.approx(2 * 128 ** 3, rel=0.01)
+
+
+def test_nested_scan_flops():
+    def nested(x, w):
+        def outer(c, _):
+            def inner(c2, _):
+                return c2 @ w, None
+            c2, _ = jax.lax.scan(inner, c, None, length=5)
+            return c2, None
+        y, _ = jax.lax.scan(outer, x, None, length=3)
+        return y
+
+    x = jnp.zeros((64, 64))
+    w = jnp.zeros((64, 64))
+    c = jax.jit(nested).lower(x, w).compile()
+    assert analyze_hlo(c.as_text()).flops == pytest.approx(15 * 2 * 64 ** 3)
+
+
+def test_batched_dot_flops():
+    f = lambda a, b: jnp.einsum("bik,bkj->bij", a, b)
+    a = jnp.zeros((4, 32, 64))
+    b = jnp.zeros((4, 64, 16))
+    c = jax.jit(f).lower(a, b).compile()
+    assert analyze_hlo(c.as_text()).flops == pytest.approx(
+        2 * 4 * 32 * 64 * 16)
+
+
+def test_bytes_positive_and_collectives_zero_on_one_device():
+    f = lambda a: (a @ a).sum()
+    a = jnp.zeros((64, 64))
+    t = analyze_hlo(jax.jit(f).lower(a).compile().as_text())
+    assert t.bytes > 0
+    assert t.collective_bytes == 0
+
+
+def test_model_flops_formulas():
+    cfg = get_config("yi-9b")
+    tr = model_flops_for(cfg, INPUT_SHAPES["train_4k"])
+    pf = model_flops_for(cfg, INPUT_SHAPES["prefill_32k"])
+    de = model_flops_for(cfg, INPUT_SHAPES["decode_32k"])
+    n = cfg.active_param_count()
+    assert tr == pytest.approx(6 * n * 256 * 4096)
+    assert pf == pytest.approx(2 * n * 32 * 32768)
+    assert de == pytest.approx(2 * n * 128)
+    # MoE uses active params
+    moe = get_config("grok-1-314b")
+    assert model_flops_for(moe, INPUT_SHAPES["train_4k"]) \
+        < 6 * moe.param_count() * 256 * 4096
+
+
+def test_roofline_terms_and_dominance():
+    t = roofline(hlo_flops=197e12, hlo_bytes=819e9, coll_bytes=0, chips=256)
+    assert t.compute_s == pytest.approx(1.0)
+    assert t.memory_s == pytest.approx(1.0)
+    assert t.dominant in ("compute", "memory")
+    t2 = roofline(1.0, 1.0, 50e9 * 10, chips=256)
+    assert t2.dominant == "collective"
+    assert t2.collective_s == pytest.approx(10.0)

@@ -1,0 +1,63 @@
+"""int8 KV cache (§Perf K1): quantization round-trip accuracy, end-to-end
+decode agreement with the bf16 cache, and cache size halving."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import smoke_config
+from repro.models import Model
+from repro.models.kvquant import dequantize, quantize
+
+
+def test_quantize_roundtrip(rng):
+    x = jax.random.normal(rng, (2, 4, 64, 32)) * 3.0
+    q, s = quantize(x, scale_dtype=jnp.float32)
+    assert q.dtype == jnp.int8 and s.shape == (2, 4, 64, 1)
+    x2 = dequantize(q, s, dtype=jnp.float32)
+    # symmetric int8: ~1% relative error per element
+    rel = float(jnp.max(jnp.abs(x2 - x)) / jnp.max(jnp.abs(x)))
+    assert rel < 0.01
+
+
+@pytest.mark.parametrize("arch", ["gemma3-1b", "yi-9b"])
+def test_quantized_decode_agrees_with_bf16_cache(arch, rng):
+    cfg = smoke_config(arch)
+    m_fp = Model(cfg, param_dtype=jnp.float32)
+    m_q8 = Model(cfg, param_dtype=jnp.float32, kv_quant=True)
+    params = m_fp.init(rng)
+    B, S, CL = 2, 12, 32
+    batch = {"tokens": jax.random.randint(rng, (B, S), 0, cfg.vocab_size)}
+    lg_fp, c_fp = m_fp.prefill(params, batch, cache_len=CL)
+    lg_q8, c_q8 = m_q8.prefill(params, batch, cache_len=CL)
+    assert c_q8["layers"]["k"].dtype == jnp.int8
+    assert "k_scale" in c_q8["layers"]
+    np.testing.assert_allclose(lg_q8, lg_fp, rtol=1e-4, atol=1e-4)
+    tok = jax.random.randint(rng, (B, 1), 0, cfg.vocab_size)
+    for _ in range(3):
+        lfp, c_fp = m_fp.decode_step(params, tok, c_fp)
+        lq8, c_q8 = m_q8.decode_step(params, tok, c_q8)
+        # int8 KV error stays small and greedy tokens agree
+        err = float(jnp.max(jnp.abs(lq8 - lfp)))
+        assert err < 0.05, err
+        assert bool(jnp.all(jnp.argmax(lq8, -1) == jnp.argmax(lfp, -1)))
+        tok = jnp.argmax(lfp[:, -1, :cfg.vocab_size], -1)[:, None]
+        tok = tok.astype(jnp.int32)
+
+
+def test_quantized_cache_is_half_size(rng):
+    cfg = smoke_config("yi-9b")
+    m = Model(cfg, param_dtype=jnp.bfloat16, kv_quant=True)
+    c = m.init_cache(2, 64)
+    hd = cfg.resolved_head_dim
+    kv_bytes = c["layers"]["k"].nbytes + c["layers"]["v"].nbytes
+    scale_bytes = c["layers"]["k_scale"].nbytes + c["layers"]["v_scale"].nbytes
+    bf16_bytes = 2 * kv_bytes  # int8 -> bf16 would double
+    assert kv_bytes + scale_bytes < 0.6 * bf16_bytes
+    assert scale_bytes == kv_bytes * 2 // hd
+
+
+def test_kv_quant_skipped_for_ssm_and_audio():
+    for arch in ("mamba2-2.7b", "whisper-tiny"):
+        m = Model(smoke_config(arch), kv_quant=True)
+        assert not m.kv_quant

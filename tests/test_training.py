@@ -1,0 +1,86 @@
+"""Training substrate: optimizer math, schedule, data pipeline determinism,
+checkpoint round-trip, loss decreases end-to-end."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import smoke_config
+from repro.models import Model
+from repro.training import (DataConfig, OptimizerConfig, SyntheticLM,
+                            adamw_update, checkpoint_step, init_opt_state,
+                            lr_at, restore_checkpoint, save_checkpoint, train)
+
+
+def test_lr_schedule_shape():
+    cfg = OptimizerConfig(lr=1e-3, warmup_steps=10, total_steps=100,
+                          min_lr_ratio=0.1)
+    assert float(lr_at(cfg, jnp.asarray(0))) == 0.0
+    assert float(lr_at(cfg, jnp.asarray(10))) == pytest.approx(1e-3)
+    assert float(lr_at(cfg, jnp.asarray(100))) == pytest.approx(1e-4, rel=0.01)
+    mid = float(lr_at(cfg, jnp.asarray(55)))
+    assert 1e-4 < mid < 1e-3
+
+
+def test_adamw_step_moves_params_and_clips(rng):
+    params = {"w": jax.random.normal(rng, (8, 8)),
+              "b": jnp.zeros((8,))}
+    grads = {"w": 100.0 * jnp.ones((8, 8)), "b": jnp.ones((8,))}
+    cfg = OptimizerConfig(lr=1e-2, warmup_steps=0, clip_norm=1.0)
+    state = init_opt_state(params)
+    new_params, new_state, m = adamw_update(cfg, params, grads, state)
+    assert float(m["grad_norm"]) > 1.0     # raw norm reported
+    assert int(new_state.step) == 1
+    assert not np.allclose(np.asarray(new_params["w"]),
+                           np.asarray(params["w"]))
+
+
+def test_data_pipeline_deterministic_and_shaped():
+    cfg = smoke_config("yi-9b")
+    a = next(iter(SyntheticLM(cfg, DataConfig(batch_size=3, seq_len=32,
+                                              seed=5))))
+    b = next(iter(SyntheticLM(cfg, DataConfig(batch_size=3, seq_len=32,
+                                              seed=5))))
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    assert a["tokens"].shape == (3, 32)
+    assert (a["tokens"] >= 0).all() and (a["tokens"] < cfg.vocab_size).all()
+    # labels are next-token shifted views of the same stream
+    assert a["labels"].shape == (3, 32)
+
+
+def test_vlm_and_audio_batches_have_modality_stubs():
+    for arch, key in (("internvl2-2b", "patch_embeds"),
+                      ("whisper-tiny", "frames")):
+        cfg = smoke_config(arch)
+        b = next(iter(SyntheticLM(cfg, DataConfig(batch_size=2, seq_len=16))))
+        assert key in b and b[key].shape[0] == 2
+
+
+def test_train_loss_decreases(rng):
+    cfg = smoke_config("gemma3-1b")
+    m = Model(cfg, param_dtype=jnp.float32)
+    res = train(m, SyntheticLM(cfg, DataConfig(batch_size=4, seq_len=64)),
+                steps=40, log_every=0,
+                opt_cfg=OptimizerConfig(lr=1e-3, warmup_steps=5,
+                                        total_steps=40))
+    l = res["losses"]
+    assert sum(l[-5:]) / 5 < sum(l[:5]) / 5 - 0.05
+
+
+def test_checkpoint_roundtrip(tmp_path, rng):
+    cfg = smoke_config("hymba-1.5b")
+    m = Model(cfg, param_dtype=jnp.float32)
+    params = m.init(rng)
+    opt = init_opt_state(params)
+    path = os.path.join(tmp_path, "ckpt.npz")
+    save_checkpoint(path, {"params": params, "opt": opt}, step=7)
+    ref = {"params": jax.eval_shape(lambda: params),
+           "opt": jax.eval_shape(lambda: opt)}
+    restored = restore_checkpoint(path, ref)
+    assert checkpoint_step(path) == 7
+    flat_a = jax.tree_util.tree_leaves(restored["params"])
+    flat_b = jax.tree_util.tree_leaves(params)
+    for a, b in zip(flat_a, flat_b):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
