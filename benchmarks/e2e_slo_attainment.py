@@ -39,7 +39,10 @@ def run() -> None:
         if rep.jit:
             extra = (f";mean_group={rep.jit.mean_group:.2f}"
                      f";superkernels={rep.jit.superkernels}"
-                     f";modeled_speedup={rep.jit.modeled_speedup:.2f}x")
+                     f";modeled_speedup={rep.jit.modeled_speedup:.2f}x"
+                     f";waits={rep.jit.waits}"
+                     f";evictions={rep.jit.evictions}"
+                     f";mid_flight={rep.jit.mid_flight_admissions}")
         emit(f"e2e/{mode}", rep.modeled_time_s * 1e6,
              f"mean_lat_us={rep.mean_latency*1e6:.0f}"
              f";p99_us={rep.p_latency(0.99)*1e6:.0f}"

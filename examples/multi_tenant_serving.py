@@ -13,8 +13,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import smoke_config
+from repro.core.scheduler import SchedulerConfig
 from repro.models import Model
-from repro.serving import ServingEngine, Tenant, make_trace
+from repro.serving import ServingEngine, Tenant, make_trace, two_wave_trace
 
 
 def main() -> None:
@@ -48,7 +49,10 @@ def main() -> None:
                 f"tok/s={rep.tokens_per_s:9.0f}")
         if rep.jit:
             line += (f"  [superkernels={rep.jit.superkernels} "
-                     f"mean_group={rep.jit.mean_group:.2f}]")
+                     f"mean_group={rep.jit.mean_group:.2f} "
+                     f"waits={rep.jit.waits} "
+                     f"mid_flight={rep.jit.mid_flight_admissions} "
+                     f"evictions={rep.jit.evictions}]")
         print(line)
 
     a = [r.tokens_out for r in sorted(results["time"].requests,
@@ -58,6 +62,26 @@ def main() -> None:
     print(f"\ngreedy tokens identical across regimes: {a == b}")
     speedup = results["time"].modeled_time_s / results["vliw"].modeled_time_s
     print(f"VLIW JIT speedup over time-multiplexing: {speedup:.2f}x")
+
+    # --- the paper's §5.2 stagger, live: a second wave arrives just after
+    # the first; an arrival-aware scheduler WAITs to coalesce with it -----
+    print("\nstaged two-wave arrivals (WAIT vs never-wait):")
+    probe = ServingEngine([Tenant("w1", m1, p1, cache_len=32, max_batch=2)],
+                          mode="vliw")
+    gap = 1.2 * probe._prefill_time(m1.cfg, 8)
+    staged = two_wave_trace(["w1"], ["w2"], gap, prompt_len=8,
+                            max_new_tokens=6, slo_s=1.0)
+    for label, sc in (("wait", SchedulerConfig(min_wait_gain_s=0.0,
+                                               max_wait_s=0.05)),
+                      ("never-wait", SchedulerConfig(max_wait_s=0.0))):
+        eng = ServingEngine([Tenant("w1", m1, p1, cache_len=32, max_batch=2),
+                             Tenant("w2", m1, p1, cache_len=32, max_batch=2)],
+                            mode="vliw", sched_cfg=sc)
+        rep = eng.run(copy.deepcopy(staged))
+        print(f"  {label:10s} waits={rep.jit.waits:2d} "
+              f"mean_group={rep.jit.mean_group:.2f} "
+              f"superkernels={rep.jit.superkernels} "
+              f"modeled={rep.modeled_time_s*1e6:6.1f} us")
 
 
 if __name__ == "__main__":

@@ -1,4 +1,4 @@
-"""The OoO VLIW JIT runtime — real execution path.
+"""The OoO VLIW JIT runtime — real, event-driven execution path.
 
 This is the paper's Figure 1 made concrete: multiple tenant streams, each an
 *instruction stream* of declared kernel ops, multiplexed onto one device by
@@ -8,21 +8,37 @@ This is the paper's Figure 1 made concrete: multiple tenant streams, each an
 Execution model (TPU adaptation, DESIGN.md §2): a tenant's decode step is
 compiled into a ``KernelProgram`` — an alternating sequence of GEMM stages
 (declared to the JIT, coalescible across tenants) and glue stages (norms,
-rope, cache updates, softmax — executed eagerly per tenant). The engine
-advances all tenants concurrently: at each tick it collects every tenant's
-pending GEMM, asks the OoO scheduler for the best coalesced group, executes
-it via ``kernels.ops.execute_superkernel``, and resumes the affected
-tenants. Tenants at *different* program positions still coalesce whenever
-their problem shapes fall in the same cluster — that is the OoO part.
+rope, cache updates, softmax — executed eagerly per tenant).
+
+The runtime is a **virtual-time event loop**, not a round barrier. A
+``JitSession`` keeps the scheduler, the live op pool and the stats open
+across calls so that:
+
+  * programs are admitted **mid-flight** — a new tenant's ``KernelProgram``
+    joins the live pool *between superkernel dispatches*, not at a round
+    boundary (``JitStats.mid_flight_admissions`` counts these);
+  * the caller feeds the next known future admission into
+    ``OoOScheduler.next_arrival_t``, so the scheduler's stagger/WAIT branch
+    (paper §5.2: "purposefully delays ill-fitting kernels for better
+    coalescing at a slightly later time") executes on the real path
+    (``JitStats.waits``);
+  * per-request SLOs flow into per-op ``latest_start_t`` via the program's
+    remaining-GEMM critical path, driving EDF anchoring and the eviction of
+    already-missed stragglers (``JitStats.evictions``).
+
+``VLIWJit.run`` is the closed-world convenience wrapper: it opens a session,
+admits the given programs (plus an optional timed ``arrivals`` schedule) and
+ticks the loop to completion.
 
 Correctness: running a program must produce bit-comparable results to the
-monolithic ``Model.decode_step`` (tests/test_jit_engine.py).
+monolithic ``Model.decode_step`` (tests/test_jit_engine.py), regardless of
+admission timing (tests/test_event_loop.py).
 """
 from __future__ import annotations
 
 import dataclasses
-import time
-from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+import math
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -30,7 +46,7 @@ import jax.numpy as jnp
 from repro.configs.base import ModelConfig
 from repro.core.coalescer import Coalescer
 from repro.core.costmodel import CostModel, GemmShape, TPUV5E
-from repro.core.kernelspec import KernelOp, make_op
+from repro.core.kernelspec import make_op
 from repro.core.scheduler import OoOScheduler, SchedulerConfig
 from repro.kernels.ops import execute_superkernel
 from repro.models.layers import rmsnorm, apply_rope
@@ -49,6 +65,10 @@ class GemmStage:
     input_fn: Callable[[Dict[str, Any]], jax.Array]
     # receives (env, gemm_output)
     output_fn: Callable[[Dict[str, Any], jax.Array], None]
+    # statically-known problem shape; lets deadline annotation cost the
+    # stage without materializing its weight (weight_fn may be non-trivial,
+    # e.g. a tied-embedding transpose)
+    shape: Optional[GemmShape] = None
 
 
 @dataclasses.dataclass
@@ -68,6 +88,15 @@ class KernelProgram:
     pc: int = 0
     slo_s: float = float("inf")
     arrival_t: float = 0.0
+    # absolute request deadline; when left inf it falls back to
+    # arrival_t + slo_s. Carrying it explicitly keeps the deadline exact
+    # across successive step programs of one tenant (no float roundtrip
+    # through slo_s = deadline - now), which the scheduler's per-
+    # (stream, deadline) eviction dedup relies on.
+    deadline_t: float = float("inf")
+    batch: int = 1                 # activation rows (m) of every GEMM stage
+    _gemm_suffix: Optional[List[float]] = dataclasses.field(
+        default=None, repr=False, compare=False)
 
     def done(self) -> bool:
         return self.pc >= len(self.stages)
@@ -82,6 +111,31 @@ class KernelProgram:
             self.pc += 1
         return None
 
+    @property
+    def effective_deadline(self) -> float:
+        return self.deadline_t if math.isfinite(self.deadline_t) \
+            else self.arrival_t + self.slo_s
+
+    def remaining_gemm_time(self, cost: CostModel, pc: int) -> float:
+        """Modeled critical-path seconds of the GEMM stages in
+        ``stages[pc:]`` — the suffix the scheduler subtracts from the
+        request deadline to get the current op's ``latest_start_t``."""
+        if self._gemm_suffix is None:
+            suf = [0.0] * (len(self.stages) + 1)
+            for i in range(len(self.stages) - 1, -1, -1):
+                st = self.stages[i]
+                dt = 0.0
+                if isinstance(st, GemmStage):
+                    shape = st.shape
+                    if shape is None:
+                        w = st.weight_fn()
+                        shape = GemmShape(m=self.batch, n=int(w.shape[1]),
+                                          k=int(w.shape[0]))
+                    dt = cost.gemm_time(shape)
+                suf[i] = suf[i + 1] + dt
+            self._gemm_suffix = suf
+        return self._gemm_suffix[pc]
+
 
 # ---------------------------------------------------------------------------
 # program builder for dense GQA decode (the real-execution demo family)
@@ -89,7 +143,9 @@ class KernelProgram:
 
 def build_dense_decode_program(model, params, tokens: jax.Array, cache,
                                stream_id: int, *, slo_s: float = float("inf"),
-                               arrival_t: float = 0.0) -> KernelProgram:
+                               arrival_t: float = 0.0,
+                               deadline_t: float = float("inf")
+                               ) -> KernelProgram:
     """Compile one decode step of a dense GQA model into a KernelProgram.
 
     Equivalent to ``Model.decode_step`` but with every projection GEMM
@@ -107,8 +163,14 @@ def build_dense_decode_program(model, params, tokens: jax.Array, cache,
     def glue(fn):
         stages.append(GlueStage(fn))
 
-    def gemm(tag, wkey, wfn, infn, outfn):
-        stages.append(GemmStage(tag, wkey, wfn, infn, outfn))
+    # weight identity includes the params object: two tenants of the same
+    # architecture only share operands (and thus a single weight load in
+    # the superkernel) when they literally serve the same weights
+    pid = id(params)
+
+    def gemm(tag, wkey, wfn, infn, outfn, n, k):
+        stages.append(GemmStage(tag, wkey, wfn, infn, outfn,
+                                shape=GemmShape(m=B, n=n, k=k)))
 
     def embed(env):
         x = params["embed"][tokens]
@@ -127,10 +189,11 @@ def build_dense_decode_program(model, params, tokens: jax.Array, cache,
         glue(pre_attn)
         for name, n_heads in (("wq", cfg.num_heads), ("wk", cfg.num_kv_heads),
                               ("wv", cfg.num_kv_heads)):
-            gemm(f"attn_{name}", (cfg.name, l, name),
+            gemm(f"attn_{name}", (cfg.name, pid, l, name),
                  lambda lp=lp, name=name: lp["attn"][name],
                  lambda env: env["h"],
-                 lambda env, out, name=name: env.__setitem__(name, out))
+                 lambda env, out, name=name: env.__setitem__(name, out),
+                 n_heads * hd, cfg.d_model)
 
         def attend(env, lp=lp, l=l, is_global=is_global):
             cache = env["cache"]
@@ -168,33 +231,37 @@ def build_dense_decode_program(model, params, tokens: jax.Array, cache,
                 env["h"].dtype)
 
         glue(attend)
-        gemm("attn_wo", (cfg.name, l, "wo"),
+        gemm("attn_wo", (cfg.name, pid, l, "wo"),
              lambda lp=lp: lp["attn"]["wo"],
              lambda env: env["attn_out"],
-             lambda env, out: env.__setitem__("attn_proj", out))
+             lambda env, out: env.__setitem__("attn_proj", out),
+             cfg.d_model, cfg.num_heads * hd)
 
         def post_attn(env, lp=lp):
             env["x"] = env["x"] + env["attn_proj"]
             env["h2"] = rmsnorm(env["x"], lp["ln2"], cfg.norm_eps)
 
         glue(post_attn)
-        gemm("ffn_gate", (cfg.name, l, "w_gate"),
+        gemm("ffn_gate", (cfg.name, pid, l, "w_gate"),
              lambda lp=lp: lp["mlp"]["w_gate"],
              lambda env: env["h2"],
-             lambda env, out: env.__setitem__("gate", out))
-        gemm("ffn_up", (cfg.name, l, "w_up"),
+             lambda env, out: env.__setitem__("gate", out),
+             cfg.d_ff, cfg.d_model)
+        gemm("ffn_up", (cfg.name, pid, l, "w_up"),
              lambda lp=lp: lp["mlp"]["w_up"],
              lambda env: env["h2"],
-             lambda env, out: env.__setitem__("up", out))
+             lambda env, out: env.__setitem__("up", out),
+             cfg.d_ff, cfg.d_model)
 
         def act(env):
             env["act"] = jax.nn.silu(env["gate"]) * env["up"]
 
         glue(act)
-        gemm("ffn_down", (cfg.name, l, "w_down"),
+        gemm("ffn_down", (cfg.name, pid, l, "w_down"),
              lambda lp=lp: lp["mlp"]["w_down"],
              lambda env: env["act"],
-             lambda env, out: env.__setitem__("down", out))
+             lambda env, out: env.__setitem__("down", out),
+             cfg.d_model, cfg.d_ff)
 
         def post_ffn(env):
             env["x"] = env["x"] + env["down"]
@@ -206,15 +273,17 @@ def build_dense_decode_program(model, params, tokens: jax.Array, cache,
 
     glue(final_norm)
     if cfg.tie_embeddings:
-        gemm("unembed", (cfg.name, "unembed"),
+        gemm("unembed", (cfg.name, pid, "unembed"),
              lambda: params["embed"].T,
              lambda env: env["hf"],
-             lambda env, out: env.__setitem__("logits", out))
+             lambda env, out: env.__setitem__("logits", out),
+             int(params["embed"].shape[0]), cfg.d_model)
     else:
-        gemm("unembed", (cfg.name, "unembed"),
+        gemm("unembed", (cfg.name, pid, "unembed"),
              lambda: params["unembed"],
              lambda env: env["hf"],
-             lambda env, out: env.__setitem__("logits", out))
+             lambda env, out: env.__setitem__("logits", out),
+             int(params["unembed"].shape[1]), cfg.d_model)
 
     def finish(env):
         cache = env["cache"]
@@ -228,7 +297,8 @@ def build_dense_decode_program(model, params, tokens: jax.Array, cache,
 
     glue(finish)
     return KernelProgram(stream_id=stream_id, stages=stages, env=env,
-                         slo_s=slo_s, arrival_t=arrival_t)
+                         slo_s=slo_s, arrival_t=arrival_t,
+                         deadline_t=deadline_t, batch=B)
 
 
 # ---------------------------------------------------------------------------
@@ -244,6 +314,14 @@ class JitStats:
     modeled_time_s: float = 0.0
     modeled_serial_time_s: float = 0.0
     shared_dispatches: int = 0
+    # event-loop counters
+    waits: int = 0                 # stagger (WAIT) decisions taken
+    # missed stragglers demoted from EDF anchoring, counted once per
+    # (stream, deadline) pair — one per straggling request when deadlines
+    # are distinct; concurrent same-batch misses fuse into their batch's
+    # anchor deadline, since that is all the scheduler sees
+    evictions: int = 0
+    mid_flight_admissions: int = 0  # programs joining live ops post-start
 
     @property
     def mean_group(self) -> float:
@@ -254,9 +332,132 @@ class JitStats:
         return self.modeled_serial_time_s / self.modeled_time_s \
             if self.modeled_time_s else 1.0
 
+    def merge(self, other: "JitStats") -> "JitStats":
+        """Fold another run's counters into this one (in place). Every
+        field accumulates by ``+`` (ints, floats and lists alike), so new
+        counters are merged automatically."""
+        for f in dataclasses.fields(self):
+            setattr(self, f.name,
+                    getattr(self, f.name) + getattr(other, f.name))
+        return self
+
+
+@dataclasses.dataclass
+class TickEvent:
+    """Outcome of one scheduler decision on the session's virtual clock."""
+    kind: str                      # "dispatch" | "wait" | "idle"
+    t: float                       # virtual time after the event
+    dt: float = 0.0                # modeled device seconds consumed
+    completed: List[KernelProgram] = dataclasses.field(default_factory=list)
+
+
+# a timed admission: (virtual arrival time, program or zero-arg factory)
+Arrival = Tuple[float, Union[KernelProgram, Callable[[], KernelProgram]]]
+
+
+class JitSession:
+    """A live, admission-open run of the VLIW JIT.
+
+    Unlike the closed-world ``VLIWJit.run`` wrapper, a session keeps its
+    scheduler, live-op pool and stats across calls: the serving engine admits
+    new tenant programs *between superkernel dispatches* and advances the
+    shared virtual clock one scheduler decision (``tick``) at a time.
+    """
+
+    def __init__(self, jit: "VLIWJit"):
+        self.jit = jit
+        self.stats = JitStats()
+        self.sched = OoOScheduler(jit.cost, jit.coalescer, jit.sched_cfg)
+        # pending GEMM per program: op_id -> (program, stage)
+        self.live: Dict[int, Tuple[KernelProgram, GemmStage]] = {}
+        self._done: List[KernelProgram] = []
+        self._started = False          # True once the first tick has run
+
+    @property
+    def pending(self) -> int:
+        return len(self.live)
+
+    def set_next_arrival(self, t: float) -> None:
+        """Tell the scheduler when the next admission is coming, enabling
+        the stagger/WAIT branch on the real path."""
+        self.sched.next_arrival_t = t
+
+    def admit(self, prog: KernelProgram) -> None:
+        """Add a program to the live pool (legal at any point in time)."""
+        # mid-flight = joining other streams' live ops after execution has
+        # begun; the initial batch of admissions before the first tick is
+        # just the starting pool
+        if self.live and self._started:
+            self.stats.mid_flight_admissions += 1
+        st = prog.advance_glue()
+        if st is None:            # pure-glue program: completes immediately
+            self._done.append(prog)
+            return
+        self._push_op(prog, st)
+
+    def _push_op(self, prog: KernelProgram, st: GemmStage) -> None:
+        a = st.input_fn(prog.env)
+        w = st.weight_fn()
+        op = make_op(prog.stream_id, "gemm" if a.shape[0] > 8 else "gemv",
+                     GemmShape(m=int(a.shape[0]), n=int(w.shape[1]),
+                               k=int(w.shape[0])),
+                     arrival_t=prog.arrival_t,
+                     deadline_t=prog.effective_deadline,
+                     seq_index=prog.pc, tag=st.tag,
+                     model_id=st.weight_key[0] if st.weight_key else "")
+        # carry operand bindings on the op (declarative dispatch payload)
+        op.payload = (a, w, st.weight_key)
+        if math.isfinite(op.deadline_t):
+            # EDF anchor = deadline minus the program's remaining critical
+            # path, so upstream stages inherit the urgency of the whole step
+            op.latest_start_t = op.deadline_t \
+                - prog.remaining_gemm_time(self.jit.cost, prog.pc)
+        self.live[op.op_id] = (prog, st)
+        self.sched.push([op])
+
+    def tick(self, now: float) -> TickEvent:
+        """Execute one scheduler decision at virtual time ``now``."""
+        completed, self._done = self._done, []
+        if not self.live:
+            return TickEvent("idle", now, completed=completed)
+        self._started = True
+        decision = self.sched.decide(now)
+        self.stats.evictions = self.sched.evictions
+        if decision.kind == "wait":
+            self.stats.waits += 1
+            return TickEvent("wait", decision.wait_until, completed=completed)
+        assert decision.kind == "dispatch" and decision.plan
+        plan = decision.plan
+        problems = [op.payload[:2] for op in plan.ops]
+        wkeys = {op.payload[2] for op in plan.ops}
+        shared = len(wkeys) == 1 and len(plan.ops) > 1
+        outs = execute_superkernel(problems, bm=self.jit.bm,
+                                   shared_operand=shared)
+        stats = self.stats
+        stats.superkernels += 1
+        stats.ops_executed += len(plan.ops)
+        stats.groups.append(len(plan.ops))
+        stats.padding_waste.append(plan.padding_waste)
+        stats.shared_dispatches += int(shared)
+        t = self.jit.cost.coalesced_time([o.shape for o in plan.ops],
+                                         plan.block, shared_operand=shared)
+        stats.modeled_time_s += t
+        stats.modeled_serial_time_s += self.jit.cost.time_multiplexed(
+            [o.shape for o in plan.ops], plan.block)
+        for op, out in zip(plan.ops, outs):
+            prog, st = self.live.pop(op.op_id)
+            st.output_fn(prog.env, out)
+            prog.pc += 1
+            nxt = prog.advance_glue()
+            if nxt is None:
+                completed.append(prog)
+            else:
+                self._push_op(prog, nxt)
+        return TickEvent("dispatch", now + t, dt=t, completed=completed)
+
 
 class VLIWJit:
-    """Run a set of tenant KernelPrograms to completion with coalescing."""
+    """Run tenant KernelPrograms to completion with OoO coalescing."""
 
     def __init__(self, cost: Optional[CostModel] = None,
                  sched_cfg: SchedulerConfig = SchedulerConfig(),
@@ -266,60 +467,38 @@ class VLIWJit:
         self.sched_cfg = sched_cfg
         self.bm = bm
 
-    def run(self, programs: Sequence[KernelProgram]) -> JitStats:
-        stats = JitStats()
-        sched = OoOScheduler(self.cost, self.coalescer, self.sched_cfg)
-        # pending GEMM per stream: op_id -> (program, stage)
-        live: Dict[int, Tuple[KernelProgram, GemmStage]] = {}
+    def session(self) -> JitSession:
+        """Open an admission-open event-loop session (engine entry point)."""
+        return JitSession(self)
 
-        def admit(prog: KernelProgram) -> None:
-            st = prog.advance_glue()
-            if st is None:
-                return
-            a = st.input_fn(prog.env)
-            w = st.weight_fn()
-            op = make_op(prog.stream_id, "gemm" if a.shape[0] > 8 else "gemv",
-                         GemmShape(m=int(a.shape[0]), n=int(w.shape[1]),
-                                   k=int(w.shape[0])),
-                         arrival_t=prog.arrival_t,
-                         deadline_t=prog.arrival_t + prog.slo_s,
-                         seq_index=prog.pc, tag=st.tag,
-                         model_id=st.weight_key[0] if st.weight_key else "")
-            # carry operand bindings on the op (declarative dispatch payload)
-            op.payload = (a, w, st.weight_key)  # type: ignore[attr-defined]
-            live[op.op_id] = (prog, st)
-            sched.push([op])
+    def run(self, programs: Sequence[KernelProgram],
+            arrivals: Optional[Sequence[Arrival]] = None,
+            start_t: float = 0.0) -> JitStats:
+        """Drive a session to completion on a virtual clock.
 
+        ``programs`` are admitted at ``start_t``; each ``(t, program)`` in
+        ``arrivals`` is admitted mid-flight once the clock reaches ``t``
+        (a zero-arg factory is called at admission time, letting callers
+        defer program construction until its inputs exist).
+        """
+        session = self.session()
         for prog in programs:
-            admit(prog)
-
-        now = 0.0
-        while live:
-            decision = sched.decide(now)
-            if decision.kind == "wait":
-                now = decision.wait_until
-                continue
-            assert decision.kind == "dispatch" and decision.plan
-            plan = decision.plan
-            problems = [op.payload[:2] for op in plan.ops]  # type: ignore[attr-defined]
-            wkeys = {op.payload[2] for op in plan.ops}      # type: ignore[attr-defined]
-            shared = len(wkeys) == 1 and len(plan.ops) > 1
-            outs = execute_superkernel(problems, bm=self.bm,
-                                       shared_operand=shared)
-            stats.superkernels += 1
-            stats.ops_executed += len(plan.ops)
-            stats.groups.append(len(plan.ops))
-            stats.padding_waste.append(plan.padding_waste)
-            stats.shared_dispatches += int(shared)
-            t = self.cost.coalesced_time([o.shape for o in plan.ops],
-                                         plan.block, shared_operand=shared)
-            stats.modeled_time_s += t
-            stats.modeled_serial_time_s += self.cost.time_multiplexed(
-                [o.shape for o in plan.ops], plan.block)
-            now += t
-            for op, out in zip(plan.ops, outs):
-                prog, st = live.pop(op.op_id)
-                st.output_fn(prog.env, out)
-                prog.pc += 1
-                admit(prog)
-        return stats
+            session.admit(prog)
+        queue = sorted(arrivals or (), key=lambda e: e[0])
+        qi = 0
+        now = start_t
+        while True:
+            while qi < len(queue) and queue[qi][0] <= now:
+                entry = queue[qi][1]
+                session.admit(entry() if callable(entry) else entry)
+                qi += 1
+            session.set_next_arrival(queue[qi][0] if qi < len(queue)
+                                     else math.inf)
+            ev = session.tick(now)
+            if ev.kind == "idle":
+                if qi < len(queue):
+                    now = queue[qi][0]
+                    continue
+                break
+            now = max(now, ev.t)
+        return session.stats

@@ -34,6 +34,16 @@ class KernelOp:
     seq_index: int = 0
     tag: str = ""              # e.g. "qkv_proj", "ffn_up", "expert_gemm"
     model_id: str = ""
+    # EDF bookkeeping: the latest virtual time this op can start and still
+    # meet its request deadline given the modeled critical path behind it
+    # (set by OoOScheduler.annotate_stream / push, or by the JIT from the
+    # program's remaining-GEMM suffix).
+    latest_start_t: float = float("inf")
+    # operand bindings for the real execution path (core/jit.py attaches
+    # (activation, weight, weight_key) at admission time); excluded from
+    # repr/eq — it carries whole jax arrays
+    payload: Optional[Tuple] = dataclasses.field(default=None, repr=False,
+                                                 compare=False)
 
     @property
     def slack(self) -> float:

@@ -11,17 +11,23 @@ decides, at each device-free instant, between:
 
 Deadline accounting is per-op: an op's *latest start* is its request deadline
 minus the modeled critical-path time of everything still ahead of it in its
-stream. EDF over latest-start drives priority; ops past latest start are
-issued immediately (alone if nothing matches), and requests whose deadline is
-already unmeetable are counted as misses but still run (paper §5.2 evicts
-degraded stragglers rather than cascading them).
+stream. EDF over latest-start drives priority. Ops whose request deadline has
+already passed are *evicted* from the EDF anchor set (paper §5.2 evicts
+degraded stragglers rather than letting them cascade misses onto healthy
+requests) — they still execute, but only opportunistically inside whatever
+group the healthy anchor forms, or once nothing on-time remains; each
+demotion is counted in ``evictions``.
+
+The engine/JIT feeds ``next_arrival_t`` (the next known future admission)
+before every ``decide`` call; a WAIT is only ever issued for a strictly
+future instant, so the caller's ``now = wait_until`` loop cannot livelock on
+a stale or already-elapsed arrival time.
 """
 from __future__ import annotations
 
 import dataclasses
-import heapq
 import math
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Set, Tuple
 
 from repro.core.clustering import group_ops_exact
 from repro.core.coalescer import Coalescer, SuperkernelPlan
@@ -58,6 +64,20 @@ class OoOScheduler:
         self._stream_remaining: Dict[int, float] = {}
         # next expected arrival (the simulator/engine tells us)
         self.next_arrival_t: float = math.inf
+        # SLO-aware eviction bookkeeping: streams demoted out of the EDF
+        # anchor set because their deadline passed before they could start.
+        # Keyed by (stream, deadline) so a straggler counts once per missed
+        # request, not once per remaining GEMM stage (step programs of a
+        # fully-missed batch reuse their step-invariant final deadline; a
+        # straggler whose *step* deadlines keep elapsing next to healthy
+        # batchmates can still count once per step — the metric is
+        # demotion events, exact per-request only in the all-missed case).
+        # The set must persist for the scheduler's lifetime: successive
+        # step programs of the same missed request re-push ops under the
+        # same key, and purging it would double-count them. Growth is one
+        # small tuple per missed (stream, deadline) per session.
+        self.evictions: int = 0
+        self._demoted: Set[Tuple[int, float]] = set()
 
     # ------------------------------------------------------------------
     # queue management
@@ -68,13 +88,12 @@ class OoOScheduler:
         times = [self.cost.gemm_time(op.shape) for op in ops]
         for op, t in zip(reversed(list(ops)), reversed(times)):
             suffix += t
-            # store latest start in deadline_t's shadow via attribute
-            op.latest_start_t = op.deadline_t - suffix  # type: ignore[attr-defined]
+            op.latest_start_t = op.deadline_t - suffix
 
     def push(self, ops: Sequence[KernelOp]) -> None:
         for op in ops:
-            if not hasattr(op, "latest_start_t"):
-                op.latest_start_t = op.deadline_t - self.cost.gemm_time(op.shape)  # type: ignore[attr-defined]
+            if math.isinf(op.latest_start_t):
+                op.latest_start_t = op.deadline_t - self.cost.gemm_time(op.shape)
         self.ready.extend(ops)
 
     def pending(self) -> int:
@@ -89,32 +108,49 @@ class OoOScheduler:
         cfg = self.cfg
         target_tiles = cfg.target_tiles or self.cost.device.num_units
 
-        # 1. EDF anchor: the op with the earliest latest-start
-        anchor = min(self.ready, key=lambda o: o.latest_start_t)  # type: ignore[attr-defined]
+        # 0. SLO-aware eviction: ops whose request deadline has already
+        #    passed are demoted out of the EDF anchor set so they cannot
+        #    cascade misses onto healthy requests (paper §5.2). They still
+        #    run — opportunistically inside the anchor's group, or alone once
+        #    nothing on-time remains.
+        on_time: List[KernelOp] = []
+        for op in self.ready:
+            if op.deadline_t <= now:
+                key = (op.stream_id, op.deadline_t)
+                if key not in self._demoted:
+                    self._demoted.add(key)
+                    self.evictions += 1
+            else:
+                on_time.append(op)
+
+        # 1. EDF anchor: the earliest latest-start among on-time ops
+        anchor = min(on_time or self.ready, key=lambda o: o.latest_start_t)
 
         # 2. its zero-padding coalescing group among ready ops
         groups = group_ops_exact(self.ready)
         akey = next(k for k, v in groups.items() if anchor in v)
-        group = groups[akey]
-        # order group by urgency; anchor first
-        group = sorted(group, key=lambda o: o.latest_start_t)  # type: ignore[attr-defined]
+        # order by urgency with missed stragglers last; anchor stays first
+        group = sorted(groups[akey],
+                       key=lambda o: (o.deadline_t <= now, o.latest_start_t))
         group = group[: cfg.max_group]
         plan = self.coalescer.plan(group)
 
         # 3. stagger decision: is the group under-filling the device, and
         #    does the anchor have slack to wait for more arrivals?
         tiles = sum(self.cost.tiles(s, plan.block) for s in plan.shapes)
-        slack = anchor.latest_start_t - now  # type: ignore[attr-defined]
-        if (tiles < target_tiles and slack > 0
+        slack = anchor.latest_start_t - now
+        wait_until = min(now + slack, self.next_arrival_t,
+                         now + cfg.max_wait_s)
+        # wait_until must be strictly in the future: a WAIT that does not
+        # advance the caller's virtual clock (stale/elapsed next_arrival_t)
+        # would livelock the dispatch loop.
+        if (tiles < target_tiles and slack > 0 and wait_until > now
                 and self.next_arrival_t < now + min(slack, cfg.max_wait_s)):
             # napkin check: modeled gain of one more same-shape problem
             probe = KernelOp(-1, -1, anchor.kind, anchor.shape)
             gain = self.coalescer.marginal_gain(group, probe)
             if gain > cfg.min_wait_gain_s:
-                return Decision("wait",
-                                wait_until=min(now + slack,
-                                               self.next_arrival_t,
-                                               now + cfg.max_wait_s))
+                return Decision("wait", wait_until=wait_until)
 
         for op in plan.ops:
             self.ready.remove(op)

@@ -19,6 +19,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.pallas_compat import tpu_compiler_params
+
 
 def _kernel(x_ref, w_ref, o_ref, acc_ref, *, nk: int):
     @pl.when(pl.program_id(2) == 0)
@@ -56,7 +58,7 @@ def coalesced_gemv(x: jax.Array, w: jax.Array, *, bn: int = 128,
         out_specs=pl.BlockSpec((1, bn), lambda g, j, k: (g, j)),
         scratch_shapes=[pltpu.VMEM((1, bn), jnp.float32)],
         out_shape=jax.ShapeDtypeStruct((G, N), x.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(x, w)

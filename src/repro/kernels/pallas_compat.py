@@ -1,0 +1,18 @@
+"""Version compatibility for the Pallas TPU API.
+
+JAX renamed ``pltpu.TPUCompilerParams`` to ``pltpu.CompilerParams`` (and back
+again across releases); the pinned JAX in this container only exposes the
+``TPUCompilerParams`` spelling. ``tpu_compiler_params`` resolves whichever
+class exists at import time so the kernels build against both.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+_COMPILER_PARAMS_CLS = getattr(pltpu, "CompilerParams", None) \
+    or getattr(pltpu, "TPUCompilerParams")
+
+
+def tpu_compiler_params(**kwargs):
+    """Build a Pallas TPU compiler-params object under either JAX spelling."""
+    return _COMPILER_PARAMS_CLS(**kwargs)

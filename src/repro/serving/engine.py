@@ -1,4 +1,4 @@
-"""Multi-tenant serving engine with continuous batching.
+"""Multi-tenant serving engine: event-driven OoO serving with live admission.
 
 Three execution modes, mirroring the paper's comparison end-to-end:
 
@@ -6,9 +6,23 @@ Three execution modes, mirroring the paper's comparison end-to-end:
                 (GPU time-multiplexing, §4.1);
   * "batched" — continuous batching *within* each tenant, tenants serialized
                 (ModelBatch / TensorRT-style, §4.2's strongest baseline);
-  * "vliw"    — OUR engine: dense tenants' decode steps are compiled to
-                KernelPrograms and coalesced ACROSS tenants by the OoO JIT
-                (core/jit.py); non-dense tenants fall back to batched steps.
+  * "vliw"    — OUR engine: a single virtual-time **event loop** over an
+                admission-open ``JitSession`` (core/jit.py). Dense tenants'
+                decode steps are compiled to KernelPrograms and coalesced
+                ACROSS tenants; a request arriving mid-flight is prefilled
+                and its tenant's next program joins the live op pool
+                *between superkernel dispatches*, not at a round boundary.
+                The trace's future arrival times are fed to the OoO
+                scheduler, so its stagger/WAIT branch executes for real; the
+                tightest per-request deadline of each tenant's batch flows
+                into per-op ``latest_start_t`` for EDF anchoring and
+                eviction of already-missed stragglers. Non-dense tenants
+                fall back to monolithic batched steps inside the same loop.
+
+The baseline modes keep their defining round-synchronous semantics
+(``_run_rounds``); greedy tokens are asserted identical across all three
+modes because batch rows are independent, so scheduling order cannot change
+any request's token stream.
 
 Token generation is REAL (greedy argmax through the actual models); time is
 attributed with the calibrated device cost model, since wall-clock on a CPU
@@ -23,6 +37,7 @@ batches correct (models/attention.py).
 from __future__ import annotations
 
 import dataclasses
+import math
 import time as _time
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
@@ -32,8 +47,10 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core.costmodel import CostModel, GemmShape, TPUV5E
-from repro.core.jit import (JitStats, VLIWJit, build_dense_decode_program)
+from repro.core.jit import (JitStats, KernelProgram, VLIWJit,
+                            build_dense_decode_program)
 from repro.core.kernelspec import gemm_population
+from repro.core.scheduler import SchedulerConfig
 from repro.models.model import Model
 from repro.serving.workload import ServeRequest
 
@@ -88,12 +105,14 @@ class ServeReport:
 
 class ServingEngine:
     def __init__(self, tenants: Sequence[Tenant], mode: str = "vliw",
-                 cost: Optional[CostModel] = None, max_group: int = 16):
+                 cost: Optional[CostModel] = None, max_group: int = 16,
+                 sched_cfg: SchedulerConfig = SchedulerConfig()):
         assert mode in ("time", "batched", "vliw")
         self.tenants = {t.name: t for t in tenants}
         self.mode = mode
         self.cost = cost or CostModel(TPUV5E)
-        self.jit = VLIWJit(self.cost, max_group=max_group)
+        self.jit = VLIWJit(self.cost, sched_cfg=sched_cfg,
+                           max_group=max_group)
         self.jit_stats = JitStats()
         for t in tenants:
             t.cache = t.model.init_cache(t.max_batch, t.cache_len)
@@ -171,45 +190,12 @@ class ServingEngine:
         return self._prefill_time(m.cfg, req.prompt_len)
 
     # ------------------------------------------------------------------
-    # one decode round
+    # one decode round (baseline modes only)
     # ------------------------------------------------------------------
     def _decode_round(self) -> float:
-        mode = self.mode
         live = [t for t in self.tenants.values() if t.active_slots()]
-        if not live:
-            return 0.0
         dt = 0.0
-        if mode == "vliw":
-            dense, other = [], []
-            for t in live:
-                # layerwise kernel programs support dense bf16/f32 caches;
-                # int8-KV tenants take the monolithic batched step
-                ok = t.cfg.arch_type in ("dense", "vlm") \
-                    and not getattr(t.model, "kv_quant", False)
-                (dense if ok else other).append(t)
-            progs = []
-            for sid, t in enumerate(dense):
-                progs.append(build_dense_decode_program(
-                    t.model, t.params, t.slot_tok, t.cache, stream_id=sid))
-            if progs:
-                stats = self.jit.run(progs)
-                dt += stats.modeled_time_s
-                self.jit_stats.superkernels += stats.superkernels
-                self.jit_stats.ops_executed += stats.ops_executed
-                self.jit_stats.groups += stats.groups
-                self.jit_stats.padding_waste += stats.padding_waste
-                self.jit_stats.shared_dispatches += stats.shared_dispatches
-                self.jit_stats.modeled_time_s += stats.modeled_time_s
-                self.jit_stats.modeled_serial_time_s += \
-                    stats.modeled_serial_time_s
-                for t, prog in zip(dense, progs):
-                    logits = prog.env["logits"]
-                    t.cache = prog.env["cache"]
-                    self._consume(t, logits[:, None, :])
-                dt += sum(self._attn_time(t.cfg, t.max_batch) for t in dense)
-            for t in other:
-                dt += self._tenant_batched_step(t)
-        elif mode == "batched":
+        if self.mode == "batched":
             for t in live:
                 dt += self._tenant_batched_step(t)
         else:  # time: every active request decodes alone, serialized
@@ -234,17 +220,143 @@ class ServingEngine:
             req.tokens_out.append(int(toks[slot]))
             t.slot_remaining[slot] -= 1
 
+    def _retire(self, t: Tenant, now: float) -> int:
+        """Free slots of finished requests; returns how many retired."""
+        done = 0
+        for slot in t.active_slots():
+            if t.slot_remaining[slot] <= 0:
+                req = t.slot_req[slot]
+                req.finish_t = now
+                t.slot_req[slot] = None
+                done += 1
+        return done
+
     # ------------------------------------------------------------------
-    def run(self, trace: Sequence[ServeRequest],
-            rng: Optional[jax.Array] = None) -> ServeReport:
-        rng = rng if rng is not None else jax.random.PRNGKey(0)
-        now = 0.0
-        pending = sorted(trace, key=lambda r: r.arrival_t)
-        pi = 0
-        wall0 = _time.perf_counter()
-        n_done = 0
-        while n_done < len(trace):
-            # admit
+    # the event loop (vliw mode)
+    # ------------------------------------------------------------------
+    def _jit_capable(self, t: Tenant) -> bool:
+        # layerwise kernel programs support dense bf16/f32 caches;
+        # int8-KV tenants take the monolithic batched step
+        return t.cfg.arch_type in ("dense", "vlm") \
+            and not getattr(t.model, "kv_quant", False)
+
+    def _build_program(self, t: Tenant, stream_id: int, now: float
+                       ) -> KernelProgram:
+        """Compile the tenant's next decode step, carrying the tightest
+        *this-step* deadline of its batch into the program.
+
+        A request's final deadline is discounted by the modeled time of its
+        decode steps still to come AFTER this one, so the scheduler's slack
+        (and therefore its WAIT budget) reflects whole-request progress,
+        not just the current step's GEMM suffix — otherwise a request with
+        zero end-to-end slack would look staggerable at every step.
+
+        Already-missed requests are ignored while a healthy batchmate
+        exists — one hopeless straggler must not demote the whole tenant's
+        programs from EDF anchoring and cascade misses onto requests that
+        still have slack. Only when every batched request has missed does
+        the program carry the raw (past) final deadline; that value is
+        step-invariant, which the scheduler's per-(stream, deadline)
+        eviction dedup relies on."""
+        reqs = [(t.slot_req[s], t.slot_remaining[s])
+                for s in t.active_slots()]
+        # one full decode step (GEMMs + KV streaming; _ops_time includes
+        # _attn_time already)
+        step_t = self._ops_time(t.cfg, t.max_batch)
+        finals = [r.arrival_t + r.slo_s for r, _ in reqs]
+        step_deadlines = [f - max(rem - 1, 0) * step_t
+                          for f, (_, rem) in zip(finals, reqs)]
+        future = [d for d in step_deadlines if d > now]
+        deadline = min(future) if future else \
+            min(finals) if finals else math.inf
+        return build_dense_decode_program(
+            t.model, t.params, t.slot_tok, t.cache, stream_id=stream_id,
+            arrival_t=now, deadline_t=deadline)
+
+    def _run_event_loop(self, pending: List[ServeRequest], rng: jax.Array
+                        ) -> float:
+        session = self.jit.session()
+        stream_ids = {name: i for i, name in enumerate(self.tenants)}
+        id2name = {i: name for name, i in stream_ids.items()}
+        inflight: Dict[str, KernelProgram] = {}
+        waiting: List[ServeRequest] = []   # due but not yet admissible
+        now, pi, n_done = 0.0, 0, 0
+        total = len(pending)
+        while True:
+            progressed = False
+            # 1. live admission: prefill every due request into its tenant's
+            #    slotted cache (the device serializes on prefills). A tenant
+            #    with a program inflight (or full slots) admits at its next
+            #    step boundary — prefilling under an inflight program would
+            #    be clobbered by its write-back — but other tenants' due
+            #    requests are admitted past it, not blocked behind it.
+            while pi < len(pending) and pending[pi].arrival_t <= now:
+                waiting.append(pending[pi])
+                pi += 1
+            still: List[ServeRequest] = []
+            for req in waiting:
+                t = self.tenants[req.tenant]
+                if req.tenant in inflight:
+                    still.append(req)
+                    continue
+                dt = self._admit(t, req, rng)
+                if dt == 0.0 and req.tokens_out is None:
+                    still.append(req)  # tenant slots full; retry later
+                    continue
+                now += dt
+                progressed = True
+            waiting = still
+            session.set_next_arrival(pending[pi].arrival_t
+                                     if pi < len(pending) else math.inf)
+
+            # 2. every JIT-capable tenant with live requests keeps a program
+            #    in the pool — admitted between dispatches, not per round
+            for name, t in self.tenants.items():
+                if self._jit_capable(t) and name not in inflight \
+                        and t.active_slots():
+                    prog = self._build_program(t, stream_ids[name], now)
+                    inflight[name] = prog
+                    session.admit(prog)
+                    progressed = True
+
+            # 3. one scheduler decision on the shared virtual clock
+            ev = session.tick(now)
+            progressed |= ev.kind != "idle"
+            now = max(now, ev.t)
+            for prog in ev.completed:
+                t = self.tenants[id2name[prog.stream_id]]
+                del inflight[id2name[prog.stream_id]]
+                t.cache = prog.env["cache"]
+                self._consume(t, prog.env["logits"][:, None, :])
+                now += self._attn_time(t.cfg, t.max_batch)
+                n_done += self._retire(t, now)
+
+            # 4. non-JIT tenants interleave monolithic batched steps
+            for t in self.tenants.values():
+                if not self._jit_capable(t) and t.active_slots():
+                    now += self._tenant_batched_step(t)
+                    n_done += self._retire(t, now)
+                    progressed = True
+
+            if n_done >= total and not session.live and pi >= len(pending) \
+                    and not waiting:
+                break
+            if not progressed:
+                if pi < len(pending):
+                    now = max(now, pending[pi].arrival_t)
+                    continue
+                if not waiting:
+                    break
+        self.jit_stats.merge(session.stats)
+        return now
+
+    # ------------------------------------------------------------------
+    # round loop (baseline modes: rounds ARE their semantics)
+    # ------------------------------------------------------------------
+    def _run_rounds(self, pending: List[ServeRequest], rng: jax.Array
+                    ) -> float:
+        now, pi, n_done = 0.0, 0, 0
+        while n_done < len(pending):
             progressed = False
             while pi < len(pending) and pending[pi].arrival_t <= now:
                 req = pending[pi]
@@ -255,7 +367,6 @@ class ServingEngine:
                 now += dt
                 pi += 1
                 progressed = True
-            # decode
             dt = self._decode_round()
             if dt == 0.0 and not progressed:
                 if pi < len(pending):
@@ -263,14 +374,20 @@ class ServingEngine:
                     continue
                 break
             now += dt
-            # retire finished requests
             for t in self.tenants.values():
-                for slot in t.active_slots():
-                    if t.slot_remaining[slot] <= 0:
-                        req = t.slot_req[slot]
-                        req.finish_t = now
-                        t.slot_req[slot] = None
-                        n_done += 1
+                n_done += self._retire(t, now)
+        return now
+
+    # ------------------------------------------------------------------
+    def run(self, trace: Sequence[ServeRequest],
+            rng: Optional[jax.Array] = None) -> ServeReport:
+        rng = rng if rng is not None else jax.random.PRNGKey(0)
+        pending = sorted(trace, key=lambda r: r.arrival_t)
+        wall0 = _time.perf_counter()
+        if self.mode == "vliw":
+            makespan = self._run_event_loop(pending, rng)
+        else:
+            makespan = self._run_rounds(pending, rng)
         wall = _time.perf_counter() - wall0
-        return ServeReport(self.mode, list(trace), now, wall,
+        return ServeReport(self.mode, list(trace), makespan, wall,
                            jit=self.jit_stats if self.mode == "vliw" else None)

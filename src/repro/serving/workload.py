@@ -49,6 +49,25 @@ def bursty_arrivals(rate_hz: float, n: int, rng: np.random.Generator,
     return out
 
 
+def two_wave_trace(wave1: Sequence[str], wave2: Sequence[str],
+                   gap_s: float, *, prompt_len: int = 8,
+                   max_new_tokens: int = 8, slo_s: float = 1.0
+                   ) -> List[ServeRequest]:
+    """Deterministic staged arrivals: one request per ``wave1`` tenant at
+    t=0, one per ``wave2`` tenant at t=``gap_s``. The fixture for the
+    stagger/WAIT regression tests — wave 2 lands inside wave 1's slack
+    window, so an arrival-aware scheduler should delay under-filled
+    dispatches to coalesce with it."""
+    reqs: List[ServeRequest] = []
+    for i, name in enumerate(wave1):
+        reqs.append(ServeRequest(i, name, 0.0, prompt_len, max_new_tokens,
+                                 slo_s))
+    for j, name in enumerate(wave2):
+        reqs.append(ServeRequest(len(wave1) + j, name, float(gap_s),
+                                 prompt_len, max_new_tokens, slo_s))
+    return reqs
+
+
 def make_trace(tenants: Sequence[str], rate_hz: float, n_per_tenant: int,
                *, prompt_len: int = 32, max_new_tokens: int = 8,
                slo_s: float = 0.2, seed: int = 0, bursty: bool = False

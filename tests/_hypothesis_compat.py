@@ -1,0 +1,101 @@
+"""Hypothesis import shim for the property tests.
+
+The real ``hypothesis`` package is an optional dev dependency
+(requirements-dev.txt). When it is absent — e.g. in the minimal container —
+this module provides a tiny deterministic fallback: each ``@given`` test runs
+over a fixed grid of representative examples (strategy bounds, midpoints and
+sampled values, zipped by index), so the suite still collects and exercises
+the properties instead of erroring at import time.
+
+Usage in test modules::
+
+    from _hypothesis_compat import given, settings, st
+"""
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    import functools
+    import inspect
+    import itertools
+
+    class _Strategy:
+        """A strategy reduced to a fixed list of representative examples."""
+
+        def __init__(self, examples):
+            self.examples = list(examples)
+            assert self.examples, "strategy with no examples"
+
+    class _St:
+        @staticmethod
+        def integers(min_value, max_value):
+            mid = (min_value + max_value) // 2
+            return _Strategy(sorted({min_value, mid, max_value}))
+
+        @staticmethod
+        def sampled_from(seq):
+            return _Strategy(seq)
+
+        @staticmethod
+        def booleans():
+            return _Strategy([False, True])
+
+        @staticmethod
+        def floats(min_value=0.0, max_value=1.0, **_kw):
+            mid = 0.5 * (min_value + max_value)
+            return _Strategy(sorted({min_value, mid, max_value}))
+
+        @staticmethod
+        def tuples(*elems):
+            n = max(len(e.examples) for e in elems)
+            return _Strategy(tuple(e.examples[i % len(e.examples)]
+                                   for e in elems) for i in range(n))
+
+        @staticmethod
+        def lists(elem, min_size=0, max_size=10):
+            sizes = sorted({min_size, min(max(min_size, 3), max_size),
+                            max_size})
+            out = []
+            for size in sizes:
+                cyc = itertools.cycle(elem.examples)
+                out.append([next(cyc) for _ in range(size)])
+            return _Strategy(out)
+
+    st = _St()
+
+    def settings(*_args, **_kwargs):
+        """No-op stand-in for hypothesis.settings."""
+        def deco(fn):
+            return fn
+        return deco
+
+    def given(*garg_strats, **gkw_strats):
+        """Run the test once per example row (examples zipped by index).
+
+        Like real hypothesis, positional strategies bind the test's
+        RIGHTMOST parameters, so leading pytest fixtures keep working."""
+        def deco(fn):
+            sig = inspect.signature(fn)
+            names = list(sig.parameters)
+            pos_named = names[len(names) - len(garg_strats):] \
+                if garg_strats else []
+            strats = dict(zip(pos_named, garg_strats))
+            strats.update(gkw_strats)
+
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                n = max(len(s.examples) for s in strats.values())
+                for i in range(n):
+                    ex = {name: s.examples[i % len(s.examples)]
+                          for name, s in strats.items()}
+                    fn(*args, **ex, **kwargs)
+
+            # hide the strategy-bound parameters from pytest's fixture
+            # resolution (real hypothesis does the same)
+            params = [p for name, p in sig.parameters.items()
+                      if name not in strats]
+            wrapper.__signature__ = sig.replace(parameters=params)
+            return wrapper
+        return deco

@@ -3,7 +3,7 @@ coalescer, autotuner, OoO scheduler, simulator."""
 import math
 
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import (Autotuner, BlockConfig, Coalescer, CostModel,
                         GemmShape, OoOScheduler, SchedulerConfig, TPUV5E,

@@ -1,0 +1,281 @@
+"""The event-driven OoO runtime: mid-flight admission, the stagger/WAIT
+branch on the real serving path, SLO eviction, and the livelock clamp."""
+import copy
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import smoke_config
+from repro.core import (Coalescer, CostModel, GemmShape, OoOScheduler,
+                        SchedulerConfig, V100, make_op)
+from repro.core.jit import JitStats, VLIWJit, build_dense_decode_program
+from repro.models import Model
+from repro.serving import ServingEngine, Tenant, two_wave_trace
+
+CM = CostModel(V100)
+
+
+# ---------------------------------------------------------------------------
+# scheduler units: livelock clamp + SLO eviction
+# ---------------------------------------------------------------------------
+
+def _sched(cfg=SchedulerConfig()):
+    return OoOScheduler(CM, Coalescer(CM), cfg)
+
+
+def test_wait_never_schedules_into_the_past():
+    """A stale/elapsed next_arrival_t must not produce wait_until <= now —
+    the dispatch loop advances time via ``now = wait_until`` and would
+    otherwise spin forever."""
+    for stale in (-1.0, 0.0):
+        sched = _sched()
+        sched.push([make_op(0, "gemm", GemmShape(64, 512, 512),
+                            deadline_t=10.0)])
+        sched.next_arrival_t = stale
+        d = sched.decide(0.0)
+        assert d.kind == "dispatch"
+    # a genuinely future arrival still triggers the stagger branch, and the
+    # wait target is strictly in the future
+    sched = _sched()
+    sched.push([make_op(0, "gemm", GemmShape(64, 512, 512), deadline_t=10.0)])
+    sched.next_arrival_t = 1e-5
+    d = sched.decide(0.0)
+    assert d.kind == "wait" and d.wait_until > 0.0
+
+
+def test_scheduler_evicts_missed_stragglers():
+    """An op whose request deadline already passed is demoted out of the EDF
+    anchor set (counted as an eviction) so it cannot cascade misses; it still
+    runs once the healthy work has been anchored."""
+    sched = _sched()
+    late = make_op(0, "gemm", GemmShape(64, 512, 512), deadline_t=0.001)
+    fresh = make_op(1, "gemm", GemmShape(64, 1024, 1024), deadline_t=10.0)
+    sched.push([late, fresh])
+    d = sched.decide(1.0)          # late's deadline is long gone
+    assert d.kind == "dispatch"
+    assert sched.evictions == 1
+    assert all(op.shape.n == 1024 for op in d.plan.ops)  # fresh anchors
+    d2 = sched.decide(1.0)         # the straggler still executes
+    assert d2.kind == "dispatch" and d2.plan.ops == [late]
+    assert sched.evictions == 1    # demotion is counted once
+
+
+def test_jitstats_merge():
+    a = JitStats(superkernels=2, ops_executed=5, groups=[2, 3],
+                 padding_waste=[0.1], modeled_time_s=1.0,
+                 modeled_serial_time_s=2.0, shared_dispatches=1, waits=1,
+                 evictions=2, mid_flight_admissions=3)
+    b = JitStats(superkernels=1, ops_executed=1, groups=[1],
+                 padding_waste=[0.0], modeled_time_s=0.5,
+                 modeled_serial_time_s=0.5, shared_dispatches=0, waits=2,
+                 evictions=0, mid_flight_admissions=1)
+    out = a.merge(b)
+    assert out is a
+    assert a.superkernels == 3 and a.ops_executed == 6
+    assert a.groups == [2, 3, 1] and a.padding_waste == [0.1, 0.0]
+    assert a.modeled_time_s == 1.5 and a.modeled_serial_time_s == 2.5
+    assert a.shared_dispatches == 1 and a.waits == 3
+    assert a.evictions == 2 and a.mid_flight_admissions == 4
+
+
+# ---------------------------------------------------------------------------
+# JIT-level mid-flight admission
+# ---------------------------------------------------------------------------
+
+def test_jit_mid_flight_arrival_matches_monolithic(rng):
+    """A program admitted mid-flight (via a deferred factory) computes
+    exactly what the monolithic decode computes, and is counted."""
+    cfg = smoke_config("gemma3-1b")
+    m = Model(cfg, param_dtype=jnp.float32)
+    params = m.init(rng)
+    batch = {"tokens": jax.random.randint(rng, (2, 12), 0, cfg.vocab_size)}
+    _, cache = m.prefill(params, batch, cache_len=32)
+    tok = jax.random.randint(jax.random.fold_in(rng, 9), (2, 1), 0,
+                             cfg.vocab_size)
+    want, _ = m.decode_step(params, tok, cache)
+
+    prog1 = build_dense_decode_program(m, params, tok, cache, stream_id=0)
+    made = []
+
+    def factory():
+        p = build_dense_decode_program(m, params, tok, cache, stream_id=1)
+        made.append(p)
+        return p
+
+    stats = VLIWJit(max_group=8).run([prog1], arrivals=[(1e-6, factory)])
+    assert made, "deferred arrival factory was never invoked"
+    assert stats.mid_flight_admissions == 1
+    for prog in (prog1, made[0]):
+        np.testing.assert_allclose(prog.env["logits"][:, None, :], want,
+                                   rtol=2e-4, atol=2e-4)
+
+
+def test_same_arch_distinct_weights_do_not_share_operands(rng):
+    """Two tenants of the same architecture but independently initialized
+    weights coalesce WITHOUT operand sharing — each stream's logits must
+    come from its own weights (regression: the weight key once ignored
+    params identity, silently computing both streams with one tenant's
+    weight matrix)."""
+    cfg = smoke_config("gemma3-1b")
+    m = Model(cfg, param_dtype=jnp.float32)
+    pa = m.init(rng)
+    pb = m.init(jax.random.fold_in(rng, 123))
+    batch = {"tokens": jax.random.randint(rng, (2, 12), 0, cfg.vocab_size)}
+    _, cache = m.prefill(pa, batch, cache_len=32)
+    _, cache_b = m.prefill(pb, batch, cache_len=32)
+    tok = jax.random.randint(jax.random.fold_in(rng, 9), (2, 1), 0,
+                             cfg.vocab_size)
+    prog_a = build_dense_decode_program(m, pa, tok, cache, stream_id=0)
+    prog_b = build_dense_decode_program(m, pb, tok, cache_b, stream_id=1)
+    stats = VLIWJit(max_group=8).run([prog_a, prog_b])
+    assert stats.shared_dispatches == 0    # distinct weights: no sharing
+    assert stats.mean_group == pytest.approx(2.0)  # but still coalesced
+    want_a, _ = m.decode_step(pa, tok, cache)
+    want_b, _ = m.decode_step(pb, tok, cache_b)
+    np.testing.assert_allclose(prog_a.env["logits"][:, None, :], want_a,
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(prog_b.env["logits"][:, None, :], want_b,
+                               rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# engine-level: live admission + the WAIT regression (paper §5.2)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def dense_models():
+    out = {}
+    for arch, seed in (("gemma3-1b", 1), ("yi-9b", 2)):
+        cfg = smoke_config(arch)
+        m = Model(cfg, param_dtype=jnp.float32)
+        out[arch] = (m, m.init(jax.random.PRNGKey(seed)))
+    return out
+
+
+def _tokens(rep):
+    return [r.tokens_out for r in sorted(rep.requests,
+                                         key=lambda r: r.req_id)]
+
+
+def test_midflight_admission_bit_identical_to_batched(dense_models):
+    """A request admitted while another tenant is mid-superkernel-stream
+    yields exactly the tokens the round-synchronous batched engine yields."""
+    m1, p1 = dense_models["gemma3-1b"]
+    m2, p2 = dense_models["yi-9b"]
+
+    def tenants():
+        return [Tenant("a", m1, p1, cache_len=32, max_batch=2),
+                Tenant("b", m2, p2, cache_len=32, max_batch=2)]
+
+    probe = ServingEngine(tenants(), mode="vliw")
+    gap = 1.5 * probe._prefill_time(m1.cfg, 8)
+    trace = two_wave_trace(["a"], ["b"], gap, prompt_len=8,
+                           max_new_tokens=4, slo_s=1.0)
+    reps = {}
+    for mode in ("batched", "vliw"):
+        eng = ServingEngine(tenants(), mode=mode)
+        reps[mode] = eng.run(copy.deepcopy(trace))
+    assert _tokens(reps["batched"]) == _tokens(reps["vliw"])
+    # wave 2 joined a non-empty op pool, between dispatches
+    assert reps["vliw"].jit.mid_flight_admissions > 0
+
+
+def test_same_tenant_midflight_arrival_bit_identical(dense_models):
+    """A second request for the SAME tenant arriving while that tenant's
+    program is inflight must not clobber the inflight step's cache: it
+    joins at the tenant's next step boundary, and tokens stay identical to
+    batched mode (regression: the prefill used to be overwritten by the
+    completing program's write-back)."""
+    m1, p1 = dense_models["gemma3-1b"]
+
+    def tenants():
+        return [Tenant("a", m1, p1, cache_len=32, max_batch=2)]
+
+    probe = ServingEngine(tenants(), mode="vliw")
+    gap = 1.5 * probe._prefill_time(m1.cfg, 8)
+    trace = two_wave_trace(["a"], ["a"], gap, prompt_len=8,
+                           max_new_tokens=4, slo_s=1.0)
+    reps = {}
+    for mode in ("batched", "vliw"):
+        eng = ServingEngine(tenants(), mode=mode)
+        reps[mode] = eng.run(copy.deepcopy(trace))
+    assert _tokens(reps["batched"]) == _tokens(reps["vliw"])
+    assert all(len(r.tokens_out) == 4 for r in reps["vliw"].requests)
+
+
+def test_deferred_tenant_does_not_block_other_admissions(dense_models):
+    """A due request deferred because its tenant's program is inflight must
+    not head-of-line-block other tenants' due requests: both a same-tenant
+    and a cross-tenant request arrive mid-step, the cross-tenant one joins
+    the live pool immediately, and tokens still match batched mode."""
+    m1, p1 = dense_models["gemma3-1b"]
+    m2, p2 = dense_models["yi-9b"]
+
+    def tenants():
+        return [Tenant("a", m1, p1, cache_len=32, max_batch=2),
+                Tenant("b", m2, p2, cache_len=32, max_batch=2)]
+
+    probe = ServingEngine(tenants(), mode="vliw")
+    gap = 1.5 * probe._prefill_time(m1.cfg, 8)
+    # wave 2: a second "a" request (deferred: a is inflight) ordered BEFORE
+    # a "b" request with the same arrival time
+    trace = two_wave_trace(["a"], ["a", "b"], gap, prompt_len=8,
+                           max_new_tokens=4, slo_s=1.0)
+    reps = {}
+    for mode in ("batched", "vliw"):
+        eng = ServingEngine(tenants(), mode=mode)
+        reps[mode] = eng.run(copy.deepcopy(trace))
+    assert _tokens(reps["batched"]) == _tokens(reps["vliw"])
+    assert all(len(r.tokens_out) == 4 for r in reps["vliw"].requests)
+    # "b" joined the live pool while "a" was mid-stream
+    assert reps["vliw"].jit.mid_flight_admissions > 0
+
+
+def test_staged_arrivals_trigger_wait_and_improve_packing(dense_models):
+    """Acceptance: on a staged two-wave trace the real serving path takes at
+    least one WAIT decision, and waiting strictly improves the mean
+    coalesced group size over the never-wait run of the same trace."""
+    m1, p1 = dense_models["gemma3-1b"]
+
+    def tenants():
+        return [Tenant("t1", m1, p1, cache_len=32, max_batch=2),
+                Tenant("t2", m1, p1, cache_len=32, max_batch=2)]
+
+    probe = ServingEngine(tenants(), mode="vliw")
+    gap = 1.2 * probe._prefill_time(m1.cfg, 8)
+    trace = two_wave_trace(["t1"], ["t2"], gap, prompt_len=8,
+                           max_new_tokens=6, slo_s=1.0)
+    wait_cfg = SchedulerConfig(min_wait_gain_s=0.0, max_wait_s=0.05)
+    nowait_cfg = SchedulerConfig(max_wait_s=0.0)   # stagger branch disabled
+    reps = {}
+    for name, sc in (("wait", wait_cfg), ("nowait", nowait_cfg)):
+        eng = ServingEngine(tenants(), mode="vliw", sched_cfg=sc)
+        reps[name] = eng.run(copy.deepcopy(trace))
+    w, n = reps["wait"].jit, reps["nowait"].jit
+    assert w.waits >= 1
+    assert n.waits == 0
+    assert w.mean_group > n.mean_group       # strictly better packing
+    assert w.superkernels < n.superkernels   # fewer, fuller dispatches
+    # staggering must not change any request's tokens
+    assert _tokens(reps["wait"]) == _tokens(reps["nowait"])
+    # SLOs were generous: nothing should have been evicted
+    assert w.evictions == 0
+
+
+def test_missed_slo_requests_counted_as_evictions(dense_models):
+    """Requests whose deadline is unmeetable get demoted (evictions > 0) but
+    still complete with correct-length outputs."""
+    m1, p1 = dense_models["gemma3-1b"]
+    tenants = [Tenant("t1", m1, p1, cache_len=32, max_batch=2),
+               Tenant("t2", m1, p1, cache_len=32, max_batch=2)]
+    trace = two_wave_trace(["t1"], ["t2"], 1e-7, prompt_len=8,
+                           max_new_tokens=3, slo_s=1e-9)  # hopeless SLO
+    eng = ServingEngine(tenants, mode="vliw")
+    rep = eng.run(copy.deepcopy(trace))
+    # one demotion per missed request (per stream×deadline), not per GEMM op
+    assert rep.jit.evictions == 2
+    assert all(len(r.tokens_out) == 3 for r in rep.requests)
+    assert rep.slo_attainment == 0.0

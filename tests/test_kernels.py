@@ -4,7 +4,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.kernels import (coalesced_gemm, coalesced_gemv, coalesced_matvec,
                            execute_superkernel, flash_attention,
