@@ -13,7 +13,7 @@ import traceback
 from benchmarks.common import header
 from benchmarks import (e2e_slo_attainment, fig3_batch_utilization,
                         fig4_time_multiplexing, fig5_spatial_variance,
-                        fig6_coalescing, fig7_clustering,
+                        fig6_coalescing, fig7_clustering, plan_cache_bench,
                         rnn_gemv_coalescing, roofline_report,
                         table1_autotuning)
 
@@ -27,6 +27,7 @@ MODULES = [
     ("rnn_gemv", rnn_gemv_coalescing),
     ("roofline", roofline_report),
     ("e2e", e2e_slo_attainment),
+    ("plan_cache", plan_cache_bench),
 ]
 
 

@@ -13,6 +13,7 @@ from repro.core.costmodel import (BlockConfig, CostModel, Device, GemmShape,
                                   TPUV5E, V100)
 from repro.core.kernelspec import KernelOp, gemm_population, make_op, \
     stream_program, zoo_population
+from repro.core.plancache import PlanCache, PlanCacheStats
 from repro.core.scheduler import Decision, OoOScheduler, SchedulerConfig
 from repro.core.simulator import (POLICIES, Request, SimResult, make_requests,
                                   simulate_space_mux, simulate_time_mux,
@@ -20,7 +21,8 @@ from repro.core.simulator import (POLICIES, Request, SimResult, make_requests,
 
 __all__ = [
     "Autotuner", "BlockConfig", "Cluster", "Coalescer", "CostModel",
-    "Decision", "Device", "GemmShape", "KernelOp", "OoOScheduler", "POLICIES",
+    "Decision", "Device", "GemmShape", "KernelOp", "OoOScheduler",
+    "PlanCache", "PlanCacheStats", "POLICIES",
     "Request", "SchedulerConfig", "SimResult", "SuperkernelPlan", "TPUV5E",
     "TuneResult", "V100", "cluster_greedy", "gemm_population",
     "group_ops_exact", "make_op", "make_requests", "simulate_space_mux",

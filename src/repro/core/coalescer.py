@@ -15,6 +15,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 from repro.core.clustering import Cluster, exact_key
 from repro.core.costmodel import BlockConfig, CostModel, DEFAULT_BLOCK, GemmShape
 from repro.core.kernelspec import KernelOp
+from repro.core.plancache import PlanCache
 
 
 @dataclasses.dataclass
@@ -39,11 +40,17 @@ class Coalescer:
 
     def __init__(self, cost: CostModel, max_group: int = 64,
                  max_waste: float = 0.25,
-                 tuned_blocks: Optional[Dict[Tuple, BlockConfig]] = None):
+                 tuned_blocks: Optional[Dict[Tuple, BlockConfig]] = None,
+                 memo: Optional[PlanCache] = None):
         self.cost = cost
         self.max_group = max_group
         self.max_waste = max_waste
         self.tuned_blocks = tuned_blocks or {}
+        # optional block-plan memo (core/plancache.py): the JIT re-plans the
+        # same coalesced group signatures on every dispatch of a steady-state
+        # decode loop, so (block config, padding waste, modeled latency) are
+        # memoized per (ordered shape tuple, shared-operand) key
+        self.memo = memo
 
     # ------------------------------------------------------------------
     def block_for(self, shapes: Sequence[GemmShape]) -> BlockConfig:
@@ -66,15 +73,25 @@ class Coalescer:
         """Plan a superkernel for an already-compatible op group."""
         ops = list(ops)[: self.max_group]
         shapes = [o.shape for o in ops]
-        block = self.block_for(shapes)
         # same weights across streams (same model+tag) => operand sharing
         shared = len({(o.model_id, o.tag, o.seq_index) for o in ops}) == 1 \
             and len(ops) > 1
-        cluster = Cluster(list(shapes))
-        t = self.cost.coalesced_time(shapes, block, shared_operand=shared)
+
+        def derive() -> Tuple[BlockConfig, float, float]:
+            block = self.block_for(shapes)
+            return (block, Cluster(list(shapes)).padding_waste,
+                    self.cost.coalesced_time(shapes, block,
+                                             shared_operand=shared))
+
+        if self.memo is not None:
+            key = ("block",
+                   tuple((s.m, s.n, s.k, s.dtype_bytes) for s in shapes),
+                   shared)
+            block, waste, t = self.memo.get_or_build(key, derive)
+        else:
+            block, waste, t = derive()
         return SuperkernelPlan(ops=ops, block=block, est_time_s=t,
-                               padding_waste=cluster.padding_waste,
-                               shared_operand=shared)
+                               padding_waste=waste, shared_operand=shared)
 
     # ------------------------------------------------------------------
     def speedup_vs_serial(self, plan: SuperkernelPlan) -> float:

@@ -30,6 +30,14 @@ across calls so that:
 admits the given programs (plus an optional timed ``arrivals`` schedule) and
 ticks the loop to completion.
 
+Scheduler overhead stays off the critical path via the persistent plan
+caches (core/plancache.py) owned by the ``VLIWJit`` and surviving sessions:
+``plan_cache`` holds compiled ``ProgramTemplate``s — the serving engine
+rebinds only per-step state (tokens, KV cache refs, deadlines) on
+steady-state ticks — and ``block_plans`` memoizes the coalescer's
+superkernel block choice per group signature. Per-session cache deltas are
+reported in ``JitStats.plan_cache`` / ``JitStats.block_plans``.
+
 Correctness: running a program must produce bit-comparable results to the
 monolithic ``Model.decode_step`` (tests/test_jit_engine.py), regardless of
 admission timing (tests/test_event_loop.py).
@@ -47,6 +55,7 @@ from repro.configs.base import ModelConfig
 from repro.core.coalescer import Coalescer
 from repro.core.costmodel import CostModel, GemmShape, TPUV5E
 from repro.core.kernelspec import make_op
+from repro.core.plancache import PlanCache, PlanCacheStats
 from repro.core.scheduler import OoOScheduler, SchedulerConfig
 from repro.kernels.ops import execute_superkernel
 from repro.models.layers import rmsnorm, apply_rope
@@ -95,8 +104,18 @@ class KernelProgram:
     # (stream, deadline) eviction dedup relies on.
     deadline_t: float = float("inf")
     batch: int = 1                 # activation rows (m) of every GEMM stage
+    # (req_id, final deadline) per request batched into this step. Plumbed
+    # onto every KernelOp the program emits so the scheduler can account
+    # SLO demotions per *request* — a straggler next to healthy batchmates
+    # counts exactly once across steps, not zero times (hidden behind the
+    # batch's healthy anchor deadline) or once per step.
+    req_deadlines: Tuple = ()
     _gemm_suffix: Optional[List[float]] = dataclasses.field(
         default=None, repr=False, compare=False)
+    # set by ProgramTemplate.bind: programs bound from one template share
+    # the template's memoized suffix instead of re-deriving it per step
+    _suffix_fn: Optional[Callable[[CostModel], List[float]]] = \
+        dataclasses.field(default=None, repr=False, compare=False)
 
     def done(self) -> bool:
         return self.pc >= len(self.stages)
@@ -121,44 +140,113 @@ class KernelProgram:
         ``stages[pc:]`` — the suffix the scheduler subtracts from the
         request deadline to get the current op's ``latest_start_t``."""
         if self._gemm_suffix is None:
-            suf = [0.0] * (len(self.stages) + 1)
-            for i in range(len(self.stages) - 1, -1, -1):
-                st = self.stages[i]
-                dt = 0.0
-                if isinstance(st, GemmStage):
-                    shape = st.shape
-                    if shape is None:
-                        w = st.weight_fn()
-                        shape = GemmShape(m=self.batch, n=int(w.shape[1]),
-                                          k=int(w.shape[0]))
-                    dt = cost.gemm_time(shape)
-                suf[i] = suf[i + 1] + dt
-            self._gemm_suffix = suf
+            if self._suffix_fn is not None:
+                self._gemm_suffix = self._suffix_fn(cost)
+            else:
+                self._gemm_suffix = _gemm_suffix_table(self.stages,
+                                                       self.batch, cost)
         return self._gemm_suffix[pc]
+
+
+def _gemm_suffix_table(stages: List[Stage], batch: int,
+                       cost: CostModel) -> List[float]:
+    """suffix[i] = modeled seconds of the GEMM stages in ``stages[i:]``."""
+    suf = [0.0] * (len(stages) + 1)
+    for i in range(len(stages) - 1, -1, -1):
+        st = stages[i]
+        dt = 0.0
+        if isinstance(st, GemmStage):
+            shape = st.shape
+            if shape is None:
+                w = st.weight_fn()
+                shape = GemmShape(m=batch, n=int(w.shape[1]),
+                                  k=int(w.shape[0]))
+            dt = cost.gemm_time(shape)
+        suf[i] = suf[i + 1] + dt
+    return suf
+
+
+# ---------------------------------------------------------------------------
+# program templates — the unit the plan cache stores
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class ProgramTemplate:
+    """A compiled-once tenant step: the stage list, glue closures and weight
+    keys, with NO per-step state. ``bind()`` rebinds only the per-step
+    environment (tokens, KV cache refs, deadlines) into a fresh lightweight
+    ``KernelProgram`` — the steady-state hot path does this instead of
+    re-deriving the whole stage list every tick.
+
+    Validity contract (what the cache key must capture): the stages close
+    over the model config, the params tree and the batch size m. Everything
+    that varies per step is read out of the program env. Templates are
+    therefore keyed by (model identity, batch m, dtype, cache geometry) and
+    identity-guarded on the params object (core/plancache.py).
+    """
+
+    stages: List[Stage]
+    batch: int
+    model_name: str = ""
+    _suffix: Optional[List[float]] = dataclasses.field(
+        default=None, repr=False, compare=False)
+    _suffix_cost_id: Optional[int] = dataclasses.field(
+        default=None, repr=False, compare=False)
+
+    def gemm_suffix(self, cost: CostModel) -> List[float]:
+        """Memoized per cost model — bound programs share one table."""
+        if self._suffix is None or self._suffix_cost_id != id(cost):
+            self._suffix = _gemm_suffix_table(self.stages, self.batch, cost)
+            self._suffix_cost_id = id(cost)
+        return self._suffix
+
+    def bind(self, *, stream_id: int, tokens: jax.Array, cache,
+             slo_s: float = float("inf"), arrival_t: float = 0.0,
+             deadline_t: float = float("inf"),
+             req_deadlines: Tuple = ()) -> KernelProgram:
+        """Instantiate one step: fresh env + deadlines, shared stages."""
+        assert int(tokens.shape[0]) == self.batch, \
+            (tokens.shape, self.batch)
+        env: Dict[str, Any] = {"tokens": tokens, "cache": cache,
+                               "new_layers": {"k": [], "v": []}}
+        return KernelProgram(stream_id=stream_id, stages=self.stages,
+                             env=env, slo_s=slo_s, arrival_t=arrival_t,
+                             deadline_t=deadline_t, batch=self.batch,
+                             req_deadlines=tuple(req_deadlines),
+                             _suffix_fn=self.gemm_suffix)
+
+
+def dense_program_cache_key(model, params, batch: int, cache) -> Tuple:
+    """Plan-cache key for a dense decode template: (model identity, active
+    batch m, dtype, cache geometry). Params identity is deliberately NOT in
+    the key — a weight hot-swap lands on the same slot and is caught by the
+    cache's identity guard (``guard=(model, params)`` at the lookup site),
+    which invalidates (and counts) instead of silently serving stale
+    closures. The guard also pins both objects, so ``id(model)`` here can
+    never be a recycled address aliasing a dead model."""
+    kc = cache["layers"]["k"]
+    return ("dense-decode", model.cfg.name, id(model), batch,
+            str(params["embed"].dtype), str(kc.dtype), tuple(kc.shape))
 
 
 # ---------------------------------------------------------------------------
 # program builder for dense GQA decode (the real-execution demo family)
 # ---------------------------------------------------------------------------
 
-def build_dense_decode_program(model, params, tokens: jax.Array, cache,
-                               stream_id: int, *, slo_s: float = float("inf"),
-                               arrival_t: float = 0.0,
-                               deadline_t: float = float("inf")
-                               ) -> KernelProgram:
-    """Compile one decode step of a dense GQA model into a KernelProgram.
+def build_dense_decode_template(model, params, batch: int) -> ProgramTemplate:
+    """Compile the decode step of a dense GQA model into a ProgramTemplate.
 
     Equivalent to ``Model.decode_step`` but with every projection GEMM
     declared to the JIT. Supported: arch_type 'dense' (and the text path of
-    'vlm'). tokens: [B, 1].
+    'vlm'). Per-step inputs (tokens [B, 1], KV cache) are read from the
+    bound program's env, so one template serves every steady-state step.
     """
     cfg: ModelConfig = model.cfg
     assert cfg.arch_type in ("dense", "vlm"), cfg.arch_type
     hd = cfg.resolved_head_dim
-    B = tokens.shape[0]
+    B = batch
     blocks = params["blocks"]
     stages: List[Stage] = []
-    env: Dict[str, Any] = {"cache": cache, "new_layers": {"k": [], "v": []}}
 
     def glue(fn):
         stages.append(GlueStage(fn))
@@ -173,7 +261,7 @@ def build_dense_decode_program(model, params, tokens: jax.Array, cache,
                                 shape=GemmShape(m=B, n=n, k=k)))
 
     def embed(env):
-        x = params["embed"][tokens]
+        x = params["embed"][env["tokens"]]
         env["x"] = (x * jnp.asarray(jnp.sqrt(cfg.d_model), x.dtype))[:, 0]
         env["pos"] = env["cache"]["pos"]
 
@@ -296,9 +384,22 @@ def build_dense_decode_program(model, params, tokens: jax.Array, cache,
         }
 
     glue(finish)
-    return KernelProgram(stream_id=stream_id, stages=stages, env=env,
+    return ProgramTemplate(stages=stages, batch=B, model_name=cfg.name)
+
+
+def build_dense_decode_program(model, params, tokens: jax.Array, cache,
+                               stream_id: int, *, slo_s: float = float("inf"),
+                               arrival_t: float = 0.0,
+                               deadline_t: float = float("inf"),
+                               req_deadlines: Tuple = ()) -> KernelProgram:
+    """One-shot compile + bind (the uncached path; kept for callers that
+    build a single step). The serving engine instead caches the template
+    (``VLIWJit.plan_cache``) and calls ``bind`` per step."""
+    template = build_dense_decode_template(model, params,
+                                           int(tokens.shape[0]))
+    return template.bind(stream_id=stream_id, tokens=tokens, cache=cache,
                          slo_s=slo_s, arrival_t=arrival_t,
-                         deadline_t=deadline_t, batch=B)
+                         deadline_t=deadline_t, req_deadlines=req_deadlines)
 
 
 # ---------------------------------------------------------------------------
@@ -316,12 +417,21 @@ class JitStats:
     shared_dispatches: int = 0
     # event-loop counters
     waits: int = 0                 # stagger (WAIT) decisions taken
-    # missed stragglers demoted from EDF anchoring, counted once per
-    # (stream, deadline) pair — one per straggling request when deadlines
-    # are distinct; concurrent same-batch misses fuse into their batch's
-    # anchor deadline, since that is all the scheduler sees
+    # missed stragglers demoted from EDF anchoring. When request ids are
+    # plumbed through the program (serving path), this counts exactly once
+    # per missed *request* across all of its steps — even a straggler
+    # hidden behind a healthy batchmate's anchor deadline; for raw op
+    # streams without ids it falls back to once per (stream, deadline)
     evictions: int = 0
     mid_flight_admissions: int = 0  # programs joining live ops post-start
+    # plan-cache deltas accrued during this run (core/plancache.py):
+    # program templates (ServingEngine._build_program / VLIWJit.plan_cache)
+    # and superkernel block plans (Coalescer memo). PlanCacheStats supports
+    # ``+`` so merge() folds these like every other counter.
+    plan_cache: PlanCacheStats = dataclasses.field(
+        default_factory=PlanCacheStats)
+    block_plans: PlanCacheStats = dataclasses.field(
+        default_factory=PlanCacheStats)
 
     @property
     def mean_group(self) -> float:
@@ -372,6 +482,14 @@ class JitSession:
         self.live: Dict[int, Tuple[KernelProgram, GemmStage]] = {}
         self._done: List[KernelProgram] = []
         self._started = False          # True once the first tick has run
+        # plan caches outlive sessions (that is the point); snapshot their
+        # counters so this session's stats report only its own delta
+        self._plan_base = jit.plan_cache.stats.copy()
+        self._block_base = jit.block_plans.stats.copy()
+
+    def _sync_cache_stats(self) -> None:
+        self.stats.plan_cache = self.jit.plan_cache.stats - self._plan_base
+        self.stats.block_plans = self.jit.block_plans.stats - self._block_base
 
     @property
     def pending(self) -> int:
@@ -407,6 +525,9 @@ class JitSession:
                      model_id=st.weight_key[0] if st.weight_key else "")
         # carry operand bindings on the op (declarative dispatch payload)
         op.payload = (a, w, st.weight_key)
+        # per-request identity: the scheduler accounts SLO demotions per
+        # request id, not per (stream, deadline) of the batch anchor
+        op.req_deadlines = prog.req_deadlines
         if math.isfinite(op.deadline_t):
             # EDF anchor = deadline minus the program's remaining critical
             # path, so upstream stages inherit the urgency of the whole step
@@ -417,12 +538,14 @@ class JitSession:
 
     def tick(self, now: float) -> TickEvent:
         """Execute one scheduler decision at virtual time ``now``."""
+        self._sync_cache_stats()
         completed, self._done = self._done, []
         if not self.live:
             return TickEvent("idle", now, completed=completed)
         self._started = True
         decision = self.sched.decide(now)
         self.stats.evictions = self.sched.evictions
+        self._sync_cache_stats()
         if decision.kind == "wait":
             self.stats.waits += 1
             return TickEvent("wait", decision.wait_until, completed=completed)
@@ -461,9 +584,18 @@ class VLIWJit:
 
     def __init__(self, cost: Optional[CostModel] = None,
                  sched_cfg: SchedulerConfig = SchedulerConfig(),
-                 max_group: int = 16, bm: int = 8):
+                 max_group: int = 16, bm: int = 8,
+                 plan_capacity: int = 128):
         self.cost = cost or CostModel(TPUV5E)
-        self.coalescer = Coalescer(self.cost, max_group=max_group)
+        # persistent plan caches (core/plancache.py): program templates for
+        # the serving hot path and superkernel block plans per coalesced
+        # group signature. They live on the JIT — across sessions — so
+        # steady-state ticks only rebind per-step state.
+        # plan_capacity=0 disables both (the rebuild-per-step baseline).
+        self.plan_cache = PlanCache(plan_capacity)
+        self.block_plans = PlanCache(plan_capacity * 4)
+        self.coalescer = Coalescer(self.cost, max_group=max_group,
+                                   memo=self.block_plans)
         self.sched_cfg = sched_cfg
         self.bm = bm
 

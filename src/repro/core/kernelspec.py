@@ -44,6 +44,13 @@ class KernelOp:
     # repr/eq — it carries whole jax arrays
     payload: Optional[Tuple] = dataclasses.field(default=None, repr=False,
                                                  compare=False)
+    # per-request identity plumbed from the serving engine through the
+    # KernelProgram: (req_id, final deadline) for every request batched
+    # into the step this op belongs to. The scheduler uses it to account
+    # SLO demotions exactly once per missed request (even one hidden
+    # behind a healthy batchmate's anchor deadline); empty for raw op
+    # streams, which fall back to (stream, deadline) accounting.
+    req_deadlines: Tuple = dataclasses.field(default=(), compare=False)
 
     @property
     def slack(self) -> float:

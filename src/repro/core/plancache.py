@@ -1,0 +1,172 @@
+"""Persistent compiled-plan cache for the OoO JIT hot path.
+
+The paper's premise (§5, after Jain et al., *Dynamic Space-Time Scheduling
+for GPU Inference*) is that late-binding scheduling only wins if the
+scheduler itself stays off the critical path. Our runtime used to pay an
+early-binding tax on every tick: ``build_dense_decode_program`` re-derived
+the full stage list for every decode step of every tenant, and the
+coalescer re-derived block plans per dispatch. This module is the shared
+memoization substrate that retires that tax:
+
+  * **program templates** — ``core/jit.py`` caches compiled
+    ``ProgramTemplate``s (stage list + glue closures + weight keys) keyed by
+    ``(model identity, active batch m, dtype, cache geometry)`` and rebinds
+    only the per-step environment (tokens, KV cache refs, deadlines) via
+    ``ProgramTemplate.bind``;
+  * **block plans** — the ``Coalescer`` memoizes the superkernel
+    grid/block choice + modeled latency per coalesced group signature
+    (ordered shape tuple, shared-operand flag).
+
+Invalidation semantics (the cache must never serve a stale plan):
+
+  * **identity guard** — every entry may carry a ``guard`` object (for
+    program templates: the ``(model, params)`` pair whose closures the
+    template baked in). A lookup whose guard is not the *same object*
+    (tuples match element-wise by ``is``) invalidates the entry and
+    rebuilds: a weight or model hot-swap therefore can never serve stale
+    closures. Guard references are strong on purpose — they pin the old
+    objects alive while the entry exists, so a recycled ``id()`` can never
+    alias two distinct models or param trees.
+  * **group tracking** — a caller may tag lookups with a ``group`` (e.g.
+    the tenant name). When the group's key changes — a tenant's active
+    batch m changed, its cache was re-geometried — the previous key is
+    invalidated immediately (unless another group still uses it) instead
+    of lingering until LRU pressure.
+  * **LRU capacity bound** — beyond ``capacity`` entries the least
+    recently used entry is evicted (counted separately from semantic
+    invalidations). ``capacity=0`` disables storage entirely: every
+    lookup is a miss and nothing is retained (the "uncached" baseline in
+    tests and benchmarks).
+
+This module is dependency-free (stdlib only) so every layer of the stack —
+coalescer, JIT, serving engine — can import it without cycles.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import OrderedDict
+from typing import Any, Callable, Dict, Hashable, Optional
+
+
+@dataclasses.dataclass
+class PlanCacheStats:
+    """Counters for one plan cache. Supports ``+``/``-`` so deltas can be
+    folded through ``JitStats.merge`` alongside the other run counters."""
+
+    hits: int = 0
+    misses: int = 0
+    invalidations: int = 0     # guard mismatch / group key change / explicit
+    evictions: int = 0         # LRU capacity pressure only
+
+    @property
+    def accesses(self) -> int:
+        return self.hits + self.misses
+
+    @property
+    def hit_rate(self) -> float:
+        return self.hits / self.accesses if self.accesses else 0.0
+
+    def copy(self) -> "PlanCacheStats":
+        return dataclasses.replace(self)
+
+    def _combine(self, other: "PlanCacheStats", sign: int) -> "PlanCacheStats":
+        return PlanCacheStats(
+            *(getattr(self, f.name) + sign * getattr(other, f.name)
+              for f in dataclasses.fields(self)))
+
+    def __add__(self, other: "PlanCacheStats") -> "PlanCacheStats":
+        return self._combine(other, +1)
+
+    def __sub__(self, other: "PlanCacheStats") -> "PlanCacheStats":
+        return self._combine(other, -1)
+
+
+@dataclasses.dataclass
+class _Entry:
+    value: Any
+    guard: Any = None
+
+
+def _guard_matches(stored: Any, guard: Any) -> bool:
+    """Identity match. A tuple guard matches element-wise by ``is`` so a
+    caller can guard one entry on several live objects at once (e.g. the
+    tenant's model AND params) — the stored tuple pins them all, so none of
+    their ids can be recycled while the entry exists."""
+    if isinstance(stored, tuple) and isinstance(guard, tuple) \
+            and len(stored) == len(guard):
+        return all(a is b for a, b in zip(stored, guard))
+    return stored is guard
+
+
+class PlanCache:
+    """Capacity-bounded LRU cache with identity-guard and group invalidation.
+
+    ``get_or_build(key, build)`` returns the cached value for ``key`` or
+    builds, stores and returns a fresh one. See the module docstring for the
+    ``guard`` / ``group`` / ``capacity`` semantics.
+    """
+
+    def __init__(self, capacity: int = 128):
+        assert capacity >= 0
+        self.capacity = capacity
+        self._entries: "OrderedDict[Hashable, _Entry]" = OrderedDict()
+        self._group_key: Dict[Hashable, Hashable] = {}
+        self.stats = PlanCacheStats()
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def __contains__(self, key: Hashable) -> bool:
+        return key in self._entries
+
+    def keys(self):
+        return list(self._entries)
+
+    # ------------------------------------------------------------------
+    def get_or_build(self, key: Hashable, build: Callable[[], Any], *,
+                     guard: Any = None, group: Optional[Hashable] = None
+                     ) -> Any:
+        if group is not None:
+            old = self._group_key.get(group)
+            if old is not None and old != key:
+                # the group's plan shape changed (e.g. batch-size change):
+                # its previous entry can never be valid for it again. Only
+                # drop it if no other group still resolves to it.
+                if not any(k == old for g, k in self._group_key.items()
+                           if g != group):
+                    if self._entries.pop(old, None) is not None:
+                        self.stats.invalidations += 1
+            self._group_key[group] = key
+        entry = self._entries.get(key)
+        if entry is not None:
+            if guard is not None and not _guard_matches(entry.guard, guard):
+                # identity guard tripped (weight hot-swap): stale plan
+                del self._entries[key]
+                self.stats.invalidations += 1
+            else:
+                self._entries.move_to_end(key)
+                self.stats.hits += 1
+                return entry.value
+        self.stats.misses += 1
+        value = build()
+        if self.capacity > 0:
+            self._entries[key] = _Entry(value, guard)
+            self._entries.move_to_end(key)
+            while len(self._entries) > self.capacity:
+                self._entries.popitem(last=False)
+                self.stats.evictions += 1
+        return value
+
+    # ------------------------------------------------------------------
+    def invalidate(self, key: Hashable) -> bool:
+        """Explicitly drop one entry; returns whether it existed."""
+        if self._entries.pop(key, None) is not None:
+            self.stats.invalidations += 1
+            return True
+        return False
+
+    def clear(self) -> None:
+        """Drop everything (counted as invalidations)."""
+        self.stats.invalidations += len(self._entries)
+        self._entries.clear()
+        self._group_key.clear()

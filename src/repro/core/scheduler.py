@@ -66,18 +66,23 @@ class OoOScheduler:
         self.next_arrival_t: float = math.inf
         # SLO-aware eviction bookkeeping: streams demoted out of the EDF
         # anchor set because their deadline passed before they could start.
-        # Keyed by (stream, deadline) so a straggler counts once per missed
-        # request, not once per remaining GEMM stage (step programs of a
-        # fully-missed batch reuse their step-invariant final deadline; a
-        # straggler whose *step* deadlines keep elapsing next to healthy
-        # batchmates can still count once per step — the metric is
-        # demotion events, exact per-request only in the all-missed case).
+        # Ops that carry per-request identity (``KernelOp.req_deadlines``,
+        # plumbed by the serving engine through the KernelProgram) are
+        # accounted under ``("req", req_id)`` — exactly once per missed
+        # request across all of its steps, including a straggler batched
+        # next to healthy batchmates whose anchor deadline hides it. Raw
+        # op streams without ids fall back to (stream, deadline) keys.
         # The set must persist for the scheduler's lifetime: successive
         # step programs of the same missed request re-push ops under the
         # same key, and purging it would double-count them. Growth is one
-        # small tuple per missed (stream, deadline) per session.
+        # small tuple per missed request per session.
         self.evictions: int = 0
-        self._demoted: Set[Tuple[int, float]] = set()
+        self._demoted: Set[Tuple] = set()
+
+    def _count_demotion(self, key: Tuple) -> None:
+        if key not in self._demoted:
+            self._demoted.add(key)
+            self.evictions += 1
 
     # ------------------------------------------------------------------
     # queue management
@@ -115,11 +120,16 @@ class OoOScheduler:
         #    nothing on-time remains.
         on_time: List[KernelOp] = []
         for op in self.ready:
+            # per-request accounting: any batched request whose own final
+            # deadline has passed counts once, even when the op itself is
+            # still on time because a healthy batchmate anchors its deadline
+            for rid, dl in op.req_deadlines:
+                if dl <= now:
+                    self._count_demotion(("req", rid))
             if op.deadline_t <= now:
-                key = (op.stream_id, op.deadline_t)
-                if key not in self._demoted:
-                    self._demoted.add(key)
-                    self.evictions += 1
+                if not op.req_deadlines:
+                    self._count_demotion((op.stream_id, op.deadline_t))
+                # ops with ids were already counted per request above
             else:
                 on_time.append(op)
 

@@ -48,7 +48,8 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.core.costmodel import CostModel, GemmShape, TPUV5E
 from repro.core.jit import (JitStats, KernelProgram, VLIWJit,
-                            build_dense_decode_program)
+                            build_dense_decode_template,
+                            dense_program_cache_key)
 from repro.core.kernelspec import gemm_population
 from repro.core.scheduler import SchedulerConfig
 from repro.models.model import Model
@@ -106,13 +107,16 @@ class ServeReport:
 class ServingEngine:
     def __init__(self, tenants: Sequence[Tenant], mode: str = "vliw",
                  cost: Optional[CostModel] = None, max_group: int = 16,
-                 sched_cfg: SchedulerConfig = SchedulerConfig()):
+                 sched_cfg: SchedulerConfig = SchedulerConfig(),
+                 plan_capacity: int = 128):
         assert mode in ("time", "batched", "vliw")
         self.tenants = {t.name: t for t in tenants}
         self.mode = mode
         self.cost = cost or CostModel(TPUV5E)
+        # plan_capacity bounds the JIT's persistent plan caches (program
+        # templates + block plans); 0 = rebuild per step (baseline)
         self.jit = VLIWJit(self.cost, sched_cfg=sched_cfg,
-                           max_group=max_group)
+                           max_group=max_group, plan_capacity=plan_capacity)
         self.jit_stats = JitStats()
         for t in tenants:
             t.cache = t.model.init_cache(t.max_batch, t.cache_len)
@@ -153,12 +157,21 @@ class ServingEngine:
     # ------------------------------------------------------------------
     # admission
     # ------------------------------------------------------------------
-    def _admit(self, tenant: Tenant, req: ServeRequest, rng: jax.Array
-               ) -> float:
+    def _admit(self, tenant: Tenant, req: ServeRequest, rng: jax.Array,
+               now: float) -> float:
+        """Prefill ``req`` into the tenant. Returns the modeled prefill time
+        (0.0 with ``tokens_out`` still None means: no free slot, retry).
+
+        A request whose prefill already produced its only token
+        (``max_new_tokens <= 1``) is retired here, at admission, in every
+        mode: it never occupies a decode slot, so it cannot join a decode
+        step it does not need (which used to inflate its latency by one
+        step and emit an extra token). ``finish_t`` is set for the caller
+        to count it as done."""
+        needs_slot = req.max_new_tokens > 1
         slots = [i for i, r in enumerate(tenant.slot_req) if r is None]
-        if not slots:
+        if needs_slot and not slots:
             return 0.0  # caller retries later
-        slot = slots[0]
         m = tenant.model
         prompt = jax.random.randint(jax.random.fold_in(rng, req.req_id),
                                     (1, req.prompt_len), 0,
@@ -170,11 +183,16 @@ class ServingEngine:
         if m.cfg.is_encdec:
             pbatch["frames"] = jnp.zeros(
                 (1, m.cfg.encoder_seq_len, m.cfg.d_model), m.dtype)
-        logits, pc = m.prefill(m_params := tenant.params, pbatch,
+        logits, pc = m.prefill(tenant.params, pbatch,
                                cache_len=tenant.cache_len)
+        tok = jnp.argmax(logits[0, -1]).astype(jnp.int32)
+        req.tokens_out = [int(tok)]
+        dt = self._prefill_time(m.cfg, req.prompt_len)
+        if not needs_slot:
+            req.finish_t = now + dt    # done at admission: no decode steps
+            return dt
         # write row into the tenant's slotted cache
-        def insert(full, row):
-            return full.at[:, slot].set(row[:, 0]) if full.ndim >= 2 else full
+        slot = slots[0]
         new_layers = {}
         for key, arr in tenant.cache["layers"].items():
             new_layers[key] = arr.at[:, slot].set(pc["layers"][key][:, 0])
@@ -182,12 +200,10 @@ class ServingEngine:
             "pos": tenant.cache["pos"].at[slot].set(pc["pos"][0]),
             "layers": new_layers,
         }
-        tok = jnp.argmax(logits[0, -1]).astype(jnp.int32)
         tenant.slot_tok = tenant.slot_tok.at[slot, 0].set(tok)
         tenant.slot_req[slot] = req
         tenant.slot_remaining[slot] = req.max_new_tokens - 1
-        req.tokens_out = [int(tok)]
-        return self._prefill_time(m.cfg, req.prompt_len)
+        return dt
 
     # ------------------------------------------------------------------
     # one decode round (baseline modes only)
@@ -242,8 +258,16 @@ class ServingEngine:
 
     def _build_program(self, t: Tenant, stream_id: int, now: float
                        ) -> KernelProgram:
-        """Compile the tenant's next decode step, carrying the tightest
+        """Bind the tenant's next decode step, carrying the tightest
         *this-step* deadline of its batch into the program.
+
+        Steady-state hot path: the compiled ``ProgramTemplate`` (stage
+        list + glue closures + weight keys) comes from the JIT's persistent
+        plan cache keyed by (model identity, batch m, dtype, cache
+        geometry) and identity-guarded on ``(t.model, t.params)`` — only the per-step
+        env (tokens, KV cache refs, deadlines) is rebuilt per tick, so the
+        cache misses only on the first step, a batch-size change, or a
+        weight hot-swap.
 
         A request's final deadline is discounted by the modeled time of its
         decode steps still to come AFTER this one, so the scheduler's slack
@@ -269,9 +293,16 @@ class ServingEngine:
         future = [d for d in step_deadlines if d > now]
         deadline = min(future) if future else \
             min(finals) if finals else math.inf
-        return build_dense_decode_program(
-            t.model, t.params, t.slot_tok, t.cache, stream_id=stream_id,
-            arrival_t=now, deadline_t=deadline)
+        batch = int(t.slot_tok.shape[0])
+        template = self.jit.plan_cache.get_or_build(
+            dense_program_cache_key(t.model, t.params, batch, t.cache),
+            lambda: build_dense_decode_template(t.model, t.params, batch),
+            guard=(t.model, t.params), group=("tenant", t.name))
+        return template.bind(
+            stream_id=stream_id, tokens=t.slot_tok, cache=t.cache,
+            arrival_t=now, deadline_t=deadline,
+            req_deadlines=tuple((r.req_id, f)
+                                for (r, _), f in zip(reqs, finals)))
 
     def _run_event_loop(self, pending: List[ServeRequest], rng: jax.Array
                         ) -> float:
@@ -299,11 +330,13 @@ class ServingEngine:
                 if req.tenant in inflight:
                     still.append(req)
                     continue
-                dt = self._admit(t, req, rng)
+                dt = self._admit(t, req, rng, now)
                 if dt == 0.0 and req.tokens_out is None:
                     still.append(req)  # tenant slots full; retry later
                     continue
                 now += dt
+                if not math.isnan(req.finish_t):
+                    n_done += 1        # retired at admission (single token)
                 progressed = True
             waiting = still
             session.set_next_arrival(pending[pi].arrival_t
@@ -361,10 +394,12 @@ class ServingEngine:
             while pi < len(pending) and pending[pi].arrival_t <= now:
                 req = pending[pi]
                 t = self.tenants[req.tenant]
-                dt = self._admit(t, req, rng)
+                dt = self._admit(t, req, rng, now)
                 if dt == 0.0 and req.tokens_out is None:
                     break  # tenant full; retry after this round
                 now += dt
+                if not math.isnan(req.finish_t):
+                    n_done += 1        # retired at admission (single token)
                 pi += 1
                 progressed = True
             dt = self._decode_round()

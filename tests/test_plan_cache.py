@@ -1,0 +1,285 @@
+"""Plan cache (core/plancache.py): LRU / guard / group invalidation
+semantics, template reuse on the serving hot path (bit-identical to
+rebuild-per-step, miss only on first step), and regression tests for the
+two ROADMAP serving bugs (max_new_tokens=1 over-generation, per-request
+eviction identity)."""
+import copy
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import smoke_config
+from repro.core.jit import (JitStats, VLIWJit, build_dense_decode_program,
+                            build_dense_decode_template,
+                            dense_program_cache_key)
+from repro.core.plancache import PlanCache, PlanCacheStats
+from repro.models import Model
+from repro.serving import ServeRequest, ServingEngine, Tenant, two_wave_trace
+
+
+# ---------------------------------------------------------------------------
+# PlanCache unit semantics
+# ---------------------------------------------------------------------------
+
+def test_lru_eviction_under_capacity_pressure():
+    pc = PlanCache(capacity=2)
+    assert pc.get_or_build("a", lambda: 1) == 1
+    assert pc.get_or_build("b", lambda: 2) == 2
+    assert pc.get_or_build("a", lambda: -1) == 1   # hit refreshes recency
+    assert pc.get_or_build("c", lambda: 3) == 3    # evicts b, the LRU entry
+    assert pc.stats.evictions == 1
+    assert "b" not in pc and "a" in pc and "c" in pc
+    assert pc.get_or_build("b", lambda: 4) == 4    # b rebuilds as a miss
+    assert pc.stats.hits == 1 and pc.stats.misses == 4
+
+
+def test_capacity_zero_disables_storage():
+    pc = PlanCache(capacity=0)
+    assert pc.get_or_build("a", lambda: 1) == 1
+    assert pc.get_or_build("a", lambda: 2) == 2    # rebuilt, not cached
+    assert len(pc) == 0
+    assert pc.stats.hits == 0 and pc.stats.misses == 2
+
+
+def test_batch_size_change_invalidates_group_entry():
+    pc = PlanCache(capacity=8)
+    k4, k8 = ("prog", "tenant-a", 4), ("prog", "tenant-a", 8)
+    pc.get_or_build(k4, lambda: "plan@4", group="tenant-a")
+    pc.get_or_build(k8, lambda: "plan@8", group="tenant-a")
+    assert k4 not in pc                 # stale batch-4 plan dropped eagerly
+    assert pc.stats.invalidations == 1
+    assert k8 in pc
+
+
+def test_group_invalidation_spares_keys_shared_by_other_groups():
+    pc = PlanCache(capacity=8)
+    shared = ("prog", "modelX", 4)
+    pc.get_or_build(shared, lambda: "p", group="t1")
+    pc.get_or_build(shared, lambda: "p", group="t2")
+    pc.get_or_build(("prog", "modelX", 8), lambda: "p8", group="t2")
+    assert shared in pc                 # t1 still resolves to it
+    assert pc.stats.invalidations == 0
+
+
+def test_identity_guard_invalidates_on_object_swap():
+    pc = PlanCache(capacity=8)
+    p1, p2 = object(), object()
+    assert pc.get_or_build("k", lambda: "v1", guard=p1) == "v1"
+    assert pc.get_or_build("k", lambda: "ignored", guard=p1) == "v1"  # hit
+    assert pc.get_or_build("k", lambda: "v2", guard=p2) == "v2"  # hot swap
+    assert pc.stats.invalidations == 1
+    assert pc.stats.hits == 1 and pc.stats.misses == 2
+    # the new entry is guarded by the new object
+    assert pc.get_or_build("k", lambda: "ignored", guard=p2) == "v2"
+
+
+def test_tuple_guard_matches_elementwise_by_identity():
+    """A tuple guard pins several live objects at once (the engine guards
+    templates on (model, params)): swapping either element trips the guard,
+    and a fresh-but-identical tuple of the same objects still hits."""
+    pc = PlanCache(capacity=8)
+    model, params, params2 = object(), object(), object()
+    assert pc.get_or_build("k", lambda: "v1", guard=(model, params)) == "v1"
+    # a new tuple wrapping the SAME objects is a hit
+    assert pc.get_or_build("k", lambda: "x", guard=(model, params)) == "v1"
+    assert pc.stats.hits == 1
+    # swapping one element (model hot-swap with unchanged params, or the
+    # reverse) invalidates — the stale closures are never served
+    assert pc.get_or_build("k", lambda: "v2", guard=(model, params2)) == "v2"
+    assert pc.stats.invalidations == 1
+
+
+def test_stats_arithmetic_and_jitstats_merge():
+    a = PlanCacheStats(hits=3, misses=1, invalidations=1, evictions=0)
+    b = PlanCacheStats(hits=1, misses=2, invalidations=0, evictions=4)
+    assert a + b == PlanCacheStats(4, 3, 1, 4)
+    assert (a + b) - b == a
+    assert (a + b).hit_rate == pytest.approx(4 / 7)
+    assert PlanCacheStats().hit_rate == 0.0
+    # surfaced through JitStats.merge like every other counter
+    ja = JitStats(plan_cache=a.copy(), block_plans=PlanCacheStats(hits=2))
+    jb = JitStats(plan_cache=b.copy(),
+                  block_plans=PlanCacheStats(evictions=5))
+    ja.merge(jb)
+    assert ja.plan_cache == a + b
+    assert ja.block_plans == PlanCacheStats(hits=2, evictions=5)
+
+
+# ---------------------------------------------------------------------------
+# template bind == fresh build, bit for bit
+# ---------------------------------------------------------------------------
+
+def test_template_bind_bit_identical_to_fresh_build(rng):
+    cfg = smoke_config("gemma3-1b")
+    m = Model(cfg, param_dtype=jnp.float32)
+    params = m.init(rng)
+    batch = {"tokens": jax.random.randint(rng, (2, 12), 0, cfg.vocab_size)}
+    _, cache = m.prefill(params, batch, cache_len=32)
+    tok = jax.random.randint(jax.random.fold_in(rng, 9), (2, 1), 0,
+                             cfg.vocab_size)
+
+    fresh1 = build_dense_decode_program(m, params, tok, cache, stream_id=0)
+    VLIWJit(max_group=8).run([fresh1])
+
+    template = build_dense_decode_template(m, params, 2)
+    bound1 = template.bind(stream_id=0, tokens=tok, cache=cache)
+    VLIWJit(max_group=8).run([bound1])
+    np.testing.assert_array_equal(np.asarray(bound1.env["logits"]),
+                                  np.asarray(fresh1.env["logits"]))
+
+    # second step from the SAME template: rebind tokens + cache only
+    tok2 = jnp.argmax(bound1.env["logits"], axis=-1).astype(jnp.int32)[:, None]
+    fresh2 = build_dense_decode_program(m, params, tok2,
+                                        fresh1.env["cache"], stream_id=0)
+    VLIWJit(max_group=8).run([fresh2])
+    bound2 = template.bind(stream_id=0, tokens=tok2,
+                           cache=bound1.env["cache"])
+    VLIWJit(max_group=8).run([bound2])
+    np.testing.assert_array_equal(np.asarray(bound2.env["logits"]),
+                                  np.asarray(fresh2.env["logits"]))
+
+    # and both agree with the monolithic decode
+    want, _ = m.decode_step(params, tok, cache)
+    np.testing.assert_allclose(bound1.env["logits"][:, None, :], want,
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_cache_key_captures_batch_dtype_geometry(rng):
+    cfg = smoke_config("gemma3-1b")
+    m = Model(cfg, param_dtype=jnp.float32)
+    params = m.init(rng)
+    c2 = m.init_cache(2, 32)
+    assert dense_program_cache_key(m, params, 2, c2) \
+        == dense_program_cache_key(m, params, 2, m.init_cache(2, 32))
+    assert dense_program_cache_key(m, params, 2, c2) \
+        != dense_program_cache_key(m, params, 4, m.init_cache(4, 32))
+    assert dense_program_cache_key(m, params, 2, c2) \
+        != dense_program_cache_key(m, params, 2, m.init_cache(2, 64))
+
+
+# ---------------------------------------------------------------------------
+# serving hot path: steady-state ticks hit the cache, outputs unchanged
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def dense_models():
+    out = {}
+    for arch, seed in (("gemma3-1b", 1), ("yi-9b", 2)):
+        cfg = smoke_config(arch)
+        m = Model(cfg, param_dtype=jnp.float32)
+        out[arch] = (m, m.init(jax.random.PRNGKey(seed)))
+    return out
+
+
+def _tokens(rep):
+    return [r.tokens_out for r in sorted(rep.requests,
+                                         key=lambda r: r.req_id)]
+
+
+def test_engine_cached_bit_identical_with_steady_state_hit_rate(dense_models):
+    m1, p1 = dense_models["gemma3-1b"]
+    m2, p2 = dense_models["yi-9b"]
+
+    def tenants():
+        return [Tenant("a", m1, p1, cache_len=32, max_batch=2),
+                Tenant("b", m2, p2, cache_len=32, max_batch=2)]
+
+    steps = 5   # decode steps per request (max_new_tokens - 1)
+    trace = two_wave_trace(["a"], ["b"], 1e-5, prompt_len=8,
+                           max_new_tokens=steps + 1, slo_s=1.0)
+    reps = {}
+    for cap in (128, 0):     # cached vs rebuild-per-step baseline
+        eng = ServingEngine(tenants(), mode="vliw", plan_capacity=cap)
+        reps[cap] = eng.run(copy.deepcopy(trace))
+
+    # bit-identical token streams, cached vs uncached
+    assert _tokens(reps[128]) == _tokens(reps[0])
+
+    pc = reps[128].jit.plan_cache
+    # miss only on each tenant's first step; every steady-state tick hits
+    assert pc.misses == 2
+    assert pc.hits == 2 * (steps - 1)
+    assert pc.hit_rate >= (steps - 1) / steps - 1e-9
+    assert pc.invalidations == 0
+    un = reps[0].jit.plan_cache
+    assert un.hits == 0 and un.misses == un.accesses > 0
+    # block plans memoize across dispatches too (same group signatures
+    # recur every layer and every step)
+    assert reps[128].jit.block_plans.hits > 0
+
+
+def test_weight_hot_swap_invalidates_and_serves_new_weights(dense_models):
+    """Regression (cache-correctness guard): swapping a tenant's params
+    mid-run must invalidate its cached template — stale weight closures
+    must never be served."""
+    m1, p_old = dense_models["gemma3-1b"]
+    p_new = Model(m1.cfg, param_dtype=jnp.float32).init(
+        jax.random.PRNGKey(77))
+    trace1 = [ServeRequest(0, "a", 0.0, 8, 3, 1.0)]
+    trace2 = [ServeRequest(1, "a", 0.0, 8, 3, 1.0)]
+
+    eng = ServingEngine([Tenant("a", m1, p_old, cache_len=32, max_batch=2)],
+                        mode="vliw")
+    eng.run(copy.deepcopy(trace1))
+    assert eng.jit.plan_cache.stats.invalidations == 0
+    eng.tenants["a"].params = p_new          # weight hot-swap, same model
+    rep_swapped = eng.run(copy.deepcopy(trace2))
+    assert eng.jit.plan_cache.stats.invalidations >= 1
+
+    fresh = ServingEngine(
+        [Tenant("a", m1, p_new, cache_len=32, max_batch=2)], mode="vliw")
+    rep_fresh = fresh.run(copy.deepcopy(trace2))
+    assert _tokens(rep_swapped) == _tokens(rep_fresh)
+
+
+# ---------------------------------------------------------------------------
+# ROADMAP bugfix regressions
+# ---------------------------------------------------------------------------
+
+def test_max_new_tokens_1_retires_at_admission_all_modes(dense_models):
+    """Regression: a request whose prefill already produced its only token
+    used to join one decode step anyway (slot_remaining==0 slots retired
+    only after a decode), emitting an extra token and inflating latency by
+    a full step. It must retire at admission, in every mode."""
+    m1, p1 = dense_models["gemma3-1b"]
+
+    def tenants():
+        return [Tenant("a", m1, p1, cache_len=32, max_batch=2)]
+
+    trace = [ServeRequest(0, "a", 0.0, 8, 1, 1.0),    # single-token request
+             ServeRequest(1, "a", 0.0, 8, 4, 1.0)]    # normal batchmate
+    probe = ServingEngine(tenants(), mode="vliw")
+    prefill_t = probe._prefill_time(m1.cfg, 8)
+    toks = {}
+    for mode in ("time", "batched", "vliw"):
+        eng = ServingEngine(tenants(), mode=mode)
+        rep = eng.run(copy.deepcopy(trace))
+        r0, r1 = sorted(rep.requests, key=lambda r: r.req_id)
+        assert len(r0.tokens_out) == 1    # exactly its one prefill token
+        assert len(r1.tokens_out) == 4    # batchmate unaffected
+        # retired at admission: latency is prefill only, no decode step
+        assert r0.latency <= 2 * prefill_t + 1e-12
+        toks[mode] = _tokens(rep)
+    assert toks["time"] == toks["batched"] == toks["vliw"]
+
+
+def test_straggler_next_to_healthy_batchmate_counts_once(dense_models):
+    """Regression (per-request eviction identity): a hopeless straggler
+    batched next to a healthy request is invisible to (stream, deadline)
+    accounting — the program's anchor deadline is the healthy one. With
+    request ids plumbed through KernelProgram/KernelOp it counts exactly
+    once across all of its steps."""
+    m1, p1 = dense_models["gemma3-1b"]
+    tenants = [Tenant("a", m1, p1, cache_len=32, max_batch=2)]
+    trace = [ServeRequest(0, "a", 0.0, 8, 5, 1e-9),   # already-missed
+             ServeRequest(1, "a", 0.0, 8, 5, 10.0)]   # healthy batchmate
+    eng = ServingEngine(tenants, mode="vliw")
+    rep = eng.run(copy.deepcopy(trace))
+    # exactly once for the straggler: not 0 (hidden behind the healthy
+    # anchor), not once per step or per GEMM stage
+    assert rep.jit.evictions == 1
+    # both still complete with correct-length outputs
+    assert all(len(r.tokens_out) == 5 for r in rep.requests)
+    assert rep.requests[1].met_slo
