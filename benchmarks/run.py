@@ -14,8 +14,8 @@ from benchmarks.common import header
 from benchmarks import (e2e_slo_attainment, fig3_batch_utilization,
                         fig4_time_multiplexing, fig5_spatial_variance,
                         fig6_coalescing, fig7_clustering, plan_cache_bench,
-                        rnn_gemv_coalescing, roofline_report,
-                        table1_autotuning)
+                        prefill_coalescing_bench, rnn_gemv_coalescing,
+                        roofline_report, table1_autotuning)
 
 MODULES = [
     ("fig3", fig3_batch_utilization),
@@ -28,6 +28,7 @@ MODULES = [
     ("roofline", roofline_report),
     ("e2e", e2e_slo_attainment),
     ("plan_cache", plan_cache_bench),
+    ("prefill_coalescing", prefill_coalescing_bench),
 ]
 
 

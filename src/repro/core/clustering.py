@@ -88,9 +88,17 @@ def cluster_greedy(shapes: Sequence[GemmShape], max_waste: float = 0.25
 
 
 def group_ops_exact(ops: Sequence[KernelOp]) -> Dict[Tuple, List[KernelOp]]:
-    """Bucket ready ops by zero-padding coalescing key (kind + exact n,k)."""
+    """Bucket ready ops by zero-padding coalescing key (exact n, k, dtype).
+
+    The m (token/row) dimension — and with it the gemv/gemm aspect and the
+    decode/prefill phase — is deliberately NOT part of the key: coalesced
+    superkernels concatenate problems along m, so a tall prompt-prefill GEMM
+    packs with decode GEMVs that share its weight dims. Splitting on aspect
+    used to keep prefill traffic out of every decode group, serializing
+    exactly the large under-filled kernels the paper overlaps.
+    """
     groups: Dict[Tuple, List[KernelOp]] = {}
     for op in ops:
-        key = (op.kind,) + exact_key(op.shape)
+        key = exact_key(op.shape)
         groups.setdefault(key, []).append(op)
     return groups

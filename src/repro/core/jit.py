@@ -8,7 +8,13 @@ This is the paper's Figure 1 made concrete: multiple tenant streams, each an
 Execution model (TPU adaptation, DESIGN.md §2): a tenant's decode step is
 compiled into a ``KernelProgram`` — an alternating sequence of GEMM stages
 (declared to the JIT, coalescible across tenants) and glue stages (norms,
-rope, cache updates, softmax — executed eagerly per tenant).
+rope, cache updates, softmax — executed eagerly per tenant). Prompt
+prefills compile the same way (``build_dense_prefill_template``): the
+prompt length is the GEMM m dimension, padded to a power-of-two bucket
+(``prefill_bucket``), and the program epilogue writes the request's KV rows
+into the tenant's slotted cache — so long prompts enter the live op pool
+and coalesce with decode (and other tenants' prefill) traffic instead of
+serializing the device (``JitStats.prefill_coalesced``).
 
 The runtime is a **virtual-time event loop**, not a round barrier. A
 ``JitSession`` keeps the scheduler, the live op pool and the stats open
@@ -104,6 +110,11 @@ class KernelProgram:
     # (stream, deadline) eviction dedup relies on.
     deadline_t: float = float("inf")
     batch: int = 1                 # activation rows (m) of every GEMM stage
+    # serving phase this program implements: "decode" (one step of a slotted
+    # batch) or "prefill" (a whole prompt pass whose epilogue writes the
+    # request's KV rows into the tenant's cache). Plumbed onto every op the
+    # program emits (KernelOp.op_kind) for the scheduler's coalescing stats.
+    kind: str = "decode"
     # (req_id, final deadline) per request batched into this step. Plumbed
     # onto every KernelOp the program emits so the scheduler can account
     # SLO demotions per *request* — a straggler next to healthy batchmates
@@ -188,6 +199,10 @@ class ProgramTemplate:
     stages: List[Stage]
     batch: int
     model_name: str = ""
+    # "decode": batch = the slotted batch m, tokens bound as [m, 1];
+    # "prefill": batch = the padded prompt length (prefill bucket), tokens
+    # bound as [1, batch] — the prompt IS the GEMM m dimension.
+    kind: str = "decode"
     _suffix: Optional[List[float]] = dataclasses.field(
         default=None, repr=False, compare=False)
     _suffix_cost_id: Optional[int] = dataclasses.field(
@@ -203,15 +218,26 @@ class ProgramTemplate:
     def bind(self, *, stream_id: int, tokens: jax.Array, cache,
              slo_s: float = float("inf"), arrival_t: float = 0.0,
              deadline_t: float = float("inf"),
-             req_deadlines: Tuple = ()) -> KernelProgram:
-        """Instantiate one step: fresh env + deadlines, shared stages."""
-        assert int(tokens.shape[0]) == self.batch, \
-            (tokens.shape, self.batch)
+             req_deadlines: Tuple = (),
+             env_extra: Optional[Dict[str, Any]] = None) -> KernelProgram:
+        """Instantiate one step: fresh env + deadlines, shared stages.
+
+        ``env_extra`` merges additional per-step entries into the program
+        env (the prefill path binds ``real_len`` / ``slot`` / ``req``)."""
+        if self.kind == "prefill":
+            assert int(tokens.shape[1]) == self.batch, \
+                (tokens.shape, self.batch)
+        else:
+            assert int(tokens.shape[0]) == self.batch, \
+                (tokens.shape, self.batch)
         env: Dict[str, Any] = {"tokens": tokens, "cache": cache,
                                "new_layers": {"k": [], "v": []}}
+        if env_extra:
+            env.update(env_extra)
         return KernelProgram(stream_id=stream_id, stages=self.stages,
                              env=env, slo_s=slo_s, arrival_t=arrival_t,
                              deadline_t=deadline_t, batch=self.batch,
+                             kind=self.kind,
                              req_deadlines=tuple(req_deadlines),
                              _suffix_fn=self.gemm_suffix)
 
@@ -230,42 +256,34 @@ def dense_program_cache_key(model, params, batch: int, cache) -> Tuple:
 
 
 # ---------------------------------------------------------------------------
-# program builder for dense GQA decode (the real-execution demo family)
+# program builders for dense GQA (the real-execution demo family)
 # ---------------------------------------------------------------------------
 
-def build_dense_decode_template(model, params, batch: int) -> ProgramTemplate:
-    """Compile the decode step of a dense GQA model into a ProgramTemplate.
+def _emit_dense_body(cfg: ModelConfig, params, stages: List[Stage], *,
+                     m_rows: int, attend_for) -> None:
+    """Emit the per-layer stage scaffolding shared by the dense DECODE and
+    PREFILL builders: pre-norm, the wq/wk/wv projections, the phase-specific
+    attention glue (``attend_for(l, lp, is_global)``), wo, post-norm and the
+    gated FFN. There is deliberately exactly ONE copy of this: cross-phase
+    operand sharing (a prefill op loading weights once with a decode op)
+    requires both builders to emit byte-identical weight keys and tags, so
+    the scaffolding must never drift between them.
 
-    Equivalent to ``Model.decode_step`` but with every projection GEMM
-    declared to the JIT. Supported: arch_type 'dense' (and the text path of
-    'vlm'). Per-step inputs (tokens [B, 1], KV cache) are read from the
-    bound program's env, so one template serves every steady-state step.
-    """
-    cfg: ModelConfig = model.cfg
-    assert cfg.arch_type in ("dense", "vlm"), cfg.arch_type
+    ``m_rows`` is the activation-row count of every GEMM stage — the slotted
+    batch for decode, the padded prompt length for prefill."""
     hd = cfg.resolved_head_dim
-    B = batch
     blocks = params["blocks"]
-    stages: List[Stage] = []
-
-    def glue(fn):
-        stages.append(GlueStage(fn))
-
     # weight identity includes the params object: two tenants of the same
     # architecture only share operands (and thus a single weight load in
     # the superkernel) when they literally serve the same weights
     pid = id(params)
 
+    def glue(fn):
+        stages.append(GlueStage(fn))
+
     def gemm(tag, wkey, wfn, infn, outfn, n, k):
         stages.append(GemmStage(tag, wkey, wfn, infn, outfn,
-                                shape=GemmShape(m=B, n=n, k=k)))
-
-    def embed(env):
-        x = params["embed"][env["tokens"]]
-        env["x"] = (x * jnp.asarray(jnp.sqrt(cfg.d_model), x.dtype))[:, 0]
-        env["pos"] = env["cache"]["pos"]
-
-    glue(embed)
+                                shape=GemmShape(m=m_rows, n=n, k=k)))
 
     for l in range(cfg.num_layers):
         lp = jax.tree_util.tree_map(lambda a, l=l: a[l], blocks)
@@ -283,42 +301,7 @@ def build_dense_decode_template(model, params, batch: int) -> ProgramTemplate:
                  lambda env, out, name=name: env.__setitem__(name, out),
                  n_heads * hd, cfg.d_model)
 
-        def attend(env, lp=lp, l=l, is_global=is_global):
-            cache = env["cache"]
-            pos = jnp.broadcast_to(jnp.asarray(cache["pos"]), (B,))
-            q = env["wq"].reshape(B, 1, cfg.num_heads, hd)
-            k = env["wk"].reshape(B, 1, cfg.num_kv_heads, hd)
-            v = env["wv"].reshape(B, 1, cfg.num_kv_heads, hd)
-            posb = pos[:, None]
-            q = apply_rope(q, posb, cfg.rope_theta)
-            k = apply_rope(k, posb, cfg.rope_theta)
-            upd = jax.vmap(lambda c, kn, p: jax.lax.dynamic_update_slice(
-                c, kn, (0, p, 0)))
-            kc = upd(cache["layers"]["k"][l],
-                     k.transpose(0, 2, 1, 3).astype(
-                         cache["layers"]["k"].dtype), pos)
-            vc = upd(cache["layers"]["v"][l],
-                     v.transpose(0, 2, 1, 3).astype(
-                         cache["layers"]["v"].dtype), pos)
-            env["new_layers"]["k"].append(kc)
-            env["new_layers"]["v"].append(vc)
-            S = kc.shape[2]
-            G = cfg.num_heads // cfg.num_kv_heads
-            qg = q.reshape(B, 1, cfg.num_kv_heads, G, hd)
-            scores = jnp.einsum("bshgd,bhtd->bhgst", qg, kc,
-                                preferred_element_type=jnp.float32)
-            scores = scores / jnp.sqrt(jnp.float32(hd))
-            idx = jnp.arange(S)
-            ok = idx[None, :] <= pos[:, None]
-            if cfg.window_size > 0 and not is_global:
-                ok = ok & (idx[None, :] > (pos[:, None] - cfg.window_size))
-            scores = jnp.where(ok[:, None, None, None, :], scores, -2.0e38)
-            p = jax.nn.softmax(scores, axis=-1)
-            o = jnp.einsum("bhgst,bhtd->bshgd", p, vc.astype(jnp.float32))
-            env["attn_out"] = o.reshape(B, cfg.num_heads * hd).astype(
-                env["h"].dtype)
-
-        glue(attend)
+        glue(attend_for(l, lp, is_global))
         gemm("attn_wo", (cfg.name, pid, l, "wo"),
              lambda lp=lp: lp["attn"]["wo"],
              lambda env: env["attn_out"],
@@ -356,22 +339,93 @@ def build_dense_decode_template(model, params, batch: int) -> ProgramTemplate:
 
         glue(post_ffn)
 
+
+def _emit_unembed(cfg: ModelConfig, params, stages: List[Stage], *,
+                  m_rows: int) -> None:
+    """Emit the unembedding GEMM over ``env['hf']`` into ``env['logits']``
+    (shared by both builders; ``m_rows`` = the normed rows to unembed)."""
+    pid = id(params)
+    if cfg.tie_embeddings:
+        wfn, n = (lambda: params["embed"].T), int(params["embed"].shape[0])
+    else:
+        wfn, n = (lambda: params["unembed"]), int(params["unembed"].shape[1])
+    stages.append(GemmStage(
+        "unembed", (cfg.name, pid, "unembed"), wfn,
+        lambda env: env["hf"],
+        lambda env, out: env.__setitem__("logits", out),
+        shape=GemmShape(m=m_rows, n=n, k=cfg.d_model)))
+
+
+def build_dense_decode_template(model, params, batch: int) -> ProgramTemplate:
+    """Compile the decode step of a dense GQA model into a ProgramTemplate.
+
+    Equivalent to ``Model.decode_step`` but with every projection GEMM
+    declared to the JIT. Supported: arch_type 'dense' (and the text path of
+    'vlm'). Per-step inputs (tokens [B, 1], KV cache) are read from the
+    bound program's env, so one template serves every steady-state step.
+    """
+    cfg: ModelConfig = model.cfg
+    assert cfg.arch_type in ("dense", "vlm"), cfg.arch_type
+    hd = cfg.resolved_head_dim
+    B = batch
+    stages: List[Stage] = []
+
+    def glue(fn):
+        stages.append(GlueStage(fn))
+
+    def embed(env):
+        x = params["embed"][env["tokens"]]
+        env["x"] = (x * jnp.asarray(jnp.sqrt(cfg.d_model), x.dtype))[:, 0]
+        env["pos"] = env["cache"]["pos"]
+
+    glue(embed)
+
+    def attend_for(l, lp, is_global):
+        # one new token per row against the slotted cache, per-row positions
+        def attend(env, lp=lp, l=l, is_global=is_global):
+            cache = env["cache"]
+            pos = jnp.broadcast_to(jnp.asarray(cache["pos"]), (B,))
+            q = env["wq"].reshape(B, 1, cfg.num_heads, hd)
+            k = env["wk"].reshape(B, 1, cfg.num_kv_heads, hd)
+            v = env["wv"].reshape(B, 1, cfg.num_kv_heads, hd)
+            posb = pos[:, None]
+            q = apply_rope(q, posb, cfg.rope_theta)
+            k = apply_rope(k, posb, cfg.rope_theta)
+            upd = jax.vmap(lambda c, kn, p: jax.lax.dynamic_update_slice(
+                c, kn, (0, p, 0)))
+            kc = upd(cache["layers"]["k"][l],
+                     k.transpose(0, 2, 1, 3).astype(
+                         cache["layers"]["k"].dtype), pos)
+            vc = upd(cache["layers"]["v"][l],
+                     v.transpose(0, 2, 1, 3).astype(
+                         cache["layers"]["v"].dtype), pos)
+            env["new_layers"]["k"].append(kc)
+            env["new_layers"]["v"].append(vc)
+            S = kc.shape[2]
+            G = cfg.num_heads // cfg.num_kv_heads
+            qg = q.reshape(B, 1, cfg.num_kv_heads, G, hd)
+            scores = jnp.einsum("bshgd,bhtd->bhgst", qg, kc,
+                                preferred_element_type=jnp.float32)
+            scores = scores / jnp.sqrt(jnp.float32(hd))
+            idx = jnp.arange(S)
+            ok = idx[None, :] <= pos[:, None]
+            if cfg.window_size > 0 and not is_global:
+                ok = ok & (idx[None, :] > (pos[:, None] - cfg.window_size))
+            scores = jnp.where(ok[:, None, None, None, :], scores, -2.0e38)
+            p = jax.nn.softmax(scores, axis=-1)
+            o = jnp.einsum("bhgst,bhtd->bshgd", p, vc.astype(jnp.float32))
+            env["attn_out"] = o.reshape(B, cfg.num_heads * hd).astype(
+                env["h"].dtype)
+
+        return attend
+
+    _emit_dense_body(cfg, params, stages, m_rows=B, attend_for=attend_for)
+
     def final_norm(env):
         env["hf"] = rmsnorm(env["x"], params["final_norm"], cfg.norm_eps)
 
     glue(final_norm)
-    if cfg.tie_embeddings:
-        gemm("unembed", (cfg.name, pid, "unembed"),
-             lambda: params["embed"].T,
-             lambda env: env["hf"],
-             lambda env, out: env.__setitem__("logits", out),
-             int(params["embed"].shape[0]), cfg.d_model)
-    else:
-        gemm("unembed", (cfg.name, pid, "unembed"),
-             lambda: params["unembed"],
-             lambda env: env["hf"],
-             lambda env, out: env.__setitem__("logits", out),
-             int(params["unembed"].shape[1]), cfg.d_model)
+    _emit_unembed(cfg, params, stages, m_rows=B)
 
     def finish(env):
         cache = env["cache"]
@@ -385,6 +439,145 @@ def build_dense_decode_template(model, params, batch: int) -> ProgramTemplate:
 
     glue(finish)
     return ProgramTemplate(stages=stages, batch=B, model_name=cfg.name)
+
+
+# ---------------------------------------------------------------------------
+# prefill programs — the prompt pass as first-class declared ops
+# ---------------------------------------------------------------------------
+
+def prefill_bucket(prompt_len: int, minimum: int = 8) -> int:
+    """Power-of-two padding bucket for a prompt length.
+
+    Prefill templates are compiled per bucket, not per exact length, so the
+    plan-cache key space stays finite over arbitrary prompt distributions.
+    Padded tail rows are computed and discarded — causal masking keeps them
+    out of every real row's softmax, and the epilogue copies only the real
+    positions into the KV cache — so any bucket ≥ prompt_len is correct.
+    """
+    assert prompt_len >= 1, prompt_len
+    return max(minimum, 1 << (prompt_len - 1).bit_length())
+
+
+def prefill_program_cache_key(model, params, seq_len: int, cache) -> Tuple:
+    """Plan-cache key for a dense prefill template: (model identity, padded
+    prompt bucket, dtype, cache geometry). Same guard discipline as
+    ``dense_program_cache_key`` — params identity is caught by the lookup
+    site's ``guard=(model, params)``, never baked into the key."""
+    kc = cache["layers"]["k"]
+    return ("dense-prefill", model.cfg.name, id(model), seq_len,
+            str(params["embed"].dtype), str(kc.dtype), tuple(kc.shape))
+
+
+def build_dense_prefill_template(model, params, seq_len: int
+                                 ) -> ProgramTemplate:
+    """Compile the PROMPT pass of a dense GQA model into a ProgramTemplate.
+
+    Every projection GEMM is declared to the JIT with m = ``seq_len`` (the
+    padded prefill bucket) — tall problems that enter the live op pool and
+    coalesce with decode GEMVs (and other tenants' prefill GEMMs) sharing
+    their (n, k) weight dims. Equivalent to ``Model.prefill`` for arch_type
+    'dense', last-position logits only.
+
+    Per-request env entries (bound via ``ProgramTemplate.bind``'s
+    ``env_extra``):
+
+      * ``tokens``   — the prompt zero-padded to [1, seq_len];
+      * ``real_len`` — the true prompt length S (≤ seq_len);
+      * ``slot``     — the reserved decode-slot index the epilogue writes
+        the request's KV rows + pos into, or None for a single-token
+        request that never decodes (the cache is left untouched);
+      * ``cache``    — the tenant's slotted decode cache.
+
+    The epilogue writes exactly the rows the engine's analytic admission
+    writes (zero-padded to cache_len past S), so a declared prefill is
+    bit-compatible with ``ServingEngine._admit``'s cache state.
+    """
+    cfg: ModelConfig = model.cfg
+    assert cfg.arch_type == "dense", cfg.arch_type
+    hd = cfg.resolved_head_dim
+    Sp = seq_len
+    stages: List[Stage] = []
+
+    def glue(fn):
+        stages.append(GlueStage(fn))
+
+    def embed(env):
+        x = params["embed"][env["tokens"]]            # [1, Sp, d]
+        env["x"] = (x * jnp.asarray(jnp.sqrt(cfg.d_model), x.dtype))[0]
+        env["positions"] = jnp.arange(Sp)[None, :]    # rope positions
+
+    glue(embed)
+
+    def attend_for(l, lp, is_global):
+        # causal self-attention over the whole (padded) prompt
+        def attend(env, is_global=is_global):
+            q = env["wq"].reshape(1, Sp, cfg.num_heads, hd)
+            k = env["wk"].reshape(1, Sp, cfg.num_kv_heads, hd)
+            v = env["wv"].reshape(1, Sp, cfg.num_kv_heads, hd)
+            pos = env["positions"]
+            q = apply_rope(q, pos, cfg.rope_theta)
+            k = apply_rope(k, pos, cfg.rope_theta)
+            # decode-cache layout [Hkv, Sp, hd]: k rope'd, v raw — exactly
+            # what transformer._project_kv emits for the analytic path
+            env["new_layers"]["k"].append(k.transpose(0, 2, 1, 3))
+            env["new_layers"]["v"].append(v.transpose(0, 2, 1, 3))
+            G = cfg.num_heads // cfg.num_kv_heads
+            qg = q.reshape(1, Sp, cfg.num_kv_heads, G, hd)
+            scores = jnp.einsum("bshgd,bthd->bhgst", qg, k,
+                                preferred_element_type=jnp.float32)
+            scores = scores / jnp.sqrt(jnp.float32(hd))
+            idx = jnp.arange(Sp)
+            ok = idx[None, :] <= idx[:, None]
+            if cfg.window_size > 0 and not is_global:
+                ok = ok & (idx[None, :] > (idx[:, None] - cfg.window_size))
+            scores = jnp.where(ok[None, None, None], scores, -2.0e38)
+            p = jax.nn.softmax(scores, axis=-1)
+            o = jnp.einsum("bhgst,bthd->bshgd", p, v.astype(jnp.float32))
+            env["attn_out"] = o.reshape(Sp, cfg.num_heads * hd).astype(
+                env["h"].dtype)
+
+        return attend
+
+    _emit_dense_body(cfg, params, stages, m_rows=Sp, attend_for=attend_for)
+
+    def final_norm(env):
+        # only the last REAL position is unembedded (Model.prefill returns
+        # logits for y[:, -1:]); padded tail rows are dropped here
+        last = env["x"][env["real_len"] - 1:env["real_len"]]
+        env["hf"] = rmsnorm(last, params["final_norm"], cfg.norm_eps)
+
+    glue(final_norm)
+    _emit_unembed(cfg, params, stages, m_rows=1)
+
+    def finish(env):
+        """Epilogue: write the request's KV rows into its reserved slot.
+
+        Mirrors the engine's analytic admission write: the slot row holds
+        the S real positions (k rope'd, v raw), zero-padded to cache_len,
+        and pos[slot] = S. A single-token request (slot None) leaves the
+        cache untouched — it retires at completion without decoding."""
+        slot = env["slot"]
+        if slot is None:
+            return
+        S = env["real_len"]
+        cache = env["cache"]
+        layers = cache["layers"]
+        kc, vc = layers["k"], layers["v"]
+        cache_len = int(kc.shape[3])
+        k_new = jnp.concatenate(env["new_layers"]["k"], axis=0)[:, :, :S]
+        v_new = jnp.concatenate(env["new_layers"]["v"], axis=0)[:, :, :S]
+        pad = ((0, 0), (0, 0), (0, cache_len - S), (0, 0))
+        new_layers = dict(layers)
+        new_layers["k"] = kc.at[:, slot].set(
+            jnp.pad(k_new, pad).astype(kc.dtype))
+        new_layers["v"] = vc.at[:, slot].set(
+            jnp.pad(v_new, pad).astype(vc.dtype))
+        env["cache"] = {"pos": cache["pos"].at[slot].set(S),
+                        "layers": new_layers}
+
+    glue(finish)
+    return ProgramTemplate(stages=stages, batch=Sp, model_name=cfg.name,
+                           kind="prefill")
 
 
 def build_dense_decode_program(model, params, tokens: jax.Array, cache,
@@ -424,6 +617,11 @@ class JitStats:
     # streams without ids it falls back to once per (stream, deadline)
     evictions: int = 0
     mid_flight_admissions: int = 0  # programs joining live ops post-start
+    # dispatched superkernel groups that packed a prefill op together with
+    # at least one other stream's op — the §5.2 spatial-sharing win applied
+    # to prompt GEMMs (serving acceptance: must be > 0 on long-prompt
+    # multi-tenant traces)
+    prefill_coalesced: int = 0
     # plan-cache deltas accrued during this run (core/plancache.py):
     # program templates (ServingEngine._build_program / VLIWJit.plan_cache)
     # and superkernel block plans (Coalescer memo). PlanCacheStats supports
@@ -522,7 +720,8 @@ class JitSession:
                      arrival_t=prog.arrival_t,
                      deadline_t=prog.effective_deadline,
                      seq_index=prog.pc, tag=st.tag,
-                     model_id=st.weight_key[0] if st.weight_key else "")
+                     model_id=st.weight_key[0] if st.weight_key else "",
+                     op_kind=prog.kind)
         # carry operand bindings on the op (declarative dispatch payload)
         op.payload = (a, w, st.weight_key)
         # per-request identity: the scheduler accounts SLO demotions per
@@ -562,6 +761,9 @@ class JitSession:
         stats.groups.append(len(plan.ops))
         stats.padding_waste.append(plan.padding_waste)
         stats.shared_dispatches += int(shared)
+        if len({op.stream_id for op in plan.ops}) > 1 \
+                and any(op.op_kind == "prefill" for op in plan.ops):
+            stats.prefill_coalesced += 1
         t = self.jit.cost.coalesced_time([o.shape for o in plan.ops],
                                          plan.block, shared_operand=shared)
         stats.modeled_time_s += t

@@ -21,7 +21,16 @@ from repro.core.costmodel import GemmShape
 
 @dataclasses.dataclass
 class KernelOp:
-    """One declared unit of work in a tenant's instruction stream."""
+    """One declared unit of work in a tenant's instruction stream.
+
+    ``kind`` describes the problem's aspect (a tall "gemm" vs a skinny
+    "gemv") while ``op_kind`` names the serving phase that declared it
+    ("decode" step vs "prefill" prompt pass). Neither partitions the
+    coalescing space: the coalesced kernel concatenates problems along m,
+    so a 256-row prefill GEMM and a 4-row decode GEMV with the same (n, k)
+    pack into one superkernel (clustering.group_ops_exact) — that cross-
+    phase packing is the paper's spatial-sharing win applied to prompts.
+    """
 
     op_id: int
     stream_id: int
@@ -51,6 +60,11 @@ class KernelOp:
     # behind a healthy batchmate's anchor deadline); empty for raw op
     # streams, which fall back to (stream, deadline) accounting.
     req_deadlines: Tuple = dataclasses.field(default=(), compare=False)
+    # which serving phase declared this op: "decode" (one token against a
+    # cache, m = batch) or "prefill" (whole prompt, m = padded prompt
+    # length). Purely descriptive for scheduling stats — coalescing
+    # eligibility is (n, k, dtype) only.
+    op_kind: str = "decode"
 
     @property
     def slack(self) -> float:
@@ -61,9 +75,11 @@ _OP_COUNTER = itertools.count()
 
 
 def make_op(stream_id: int, kind: str, shape: GemmShape, *, arrival_t=0.0,
-            deadline_t=float("inf"), seq_index=0, tag="", model_id="") -> KernelOp:
+            deadline_t=float("inf"), seq_index=0, tag="", model_id="",
+            op_kind="decode") -> KernelOp:
     return KernelOp(next(_OP_COUNTER), stream_id, kind, shape, arrival_t,
-                    deadline_t, seq_index, tag, model_id)
+                    deadline_t, seq_index, tag, model_id,
+                    op_kind=op_kind)
 
 
 # ---------------------------------------------------------------------------

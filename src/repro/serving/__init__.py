@@ -1,8 +1,10 @@
 from repro.serving.engine import ServeReport, ServingEngine, Tenant
-from repro.serving.workload import (ServeRequest, bursty_arrivals, make_trace,
+from repro.serving.workload import (ServeRequest, bursty_arrivals,
+                                    long_prompt_trace, make_trace,
                                     poisson_arrivals, two_wave_trace)
 
 __all__ = [
     "ServeReport", "ServeRequest", "ServingEngine", "Tenant",
-    "bursty_arrivals", "make_trace", "poisson_arrivals", "two_wave_trace",
+    "bursty_arrivals", "long_prompt_trace", "make_trace", "poisson_arrivals",
+    "two_wave_trace",
 ]

@@ -8,10 +8,16 @@ Three execution modes, mirroring the paper's comparison end-to-end:
                 (ModelBatch / TensorRT-style, §4.2's strongest baseline);
   * "vliw"    — OUR engine: a single virtual-time **event loop** over an
                 admission-open ``JitSession`` (core/jit.py). Dense tenants'
-                decode steps are compiled to KernelPrograms and coalesced
-                ACROSS tenants; a request arriving mid-flight is prefilled
-                and its tenant's next program joins the live op pool
-                *between superkernel dispatches*, not at a round boundary.
+                decode steps AND prompt prefills are compiled to
+                KernelPrograms and coalesced ACROSS tenants: admission
+                *declares* a prefill program (prompt GEMMs enter the live
+                op pool, KV write-back is the program epilogue, and the
+                tenant's decode joins only after the completion event)
+                instead of charging the prompt analytically on the shared
+                clock — so a long prompt no longer head-of-line-blocks
+                other tenants, it coalesces with them. A request arriving
+                mid-flight joins *between superkernel dispatches*, not at
+                a round boundary.
                 The trace's future arrival times are fed to the OoO
                 scheduler, so its stagger/WAIT branch executes for real; the
                 tightest per-request deadline of each tenant's batch flows
@@ -49,7 +55,9 @@ from repro.configs.base import ModelConfig
 from repro.core.costmodel import CostModel, GemmShape, TPUV5E
 from repro.core.jit import (JitStats, KernelProgram, VLIWJit,
                             build_dense_decode_template,
-                            dense_program_cache_key)
+                            build_dense_prefill_template,
+                            dense_program_cache_key, prefill_bucket,
+                            prefill_program_cache_key)
 from repro.core.kernelspec import gemm_population
 from repro.core.scheduler import SchedulerConfig
 from repro.models.model import Model
@@ -87,20 +95,41 @@ class ServeReport:
     jit: Optional[JitStats] = None
 
     @property
+    def finished(self) -> List[ServeRequest]:
+        return [r for r in self.requests if not np.isnan(r.finish_t)]
+
+    @property
+    def unfinished(self) -> int:
+        """Requests that never finished (dropped / stalled / unadmittable).
+        Exposed so latency stats restricted to finished requests cannot
+        silently hide drops."""
+        return len(self.requests) - len(self.finished)
+
+    @property
     def slo_attainment(self) -> float:
-        done = [r for r in self.requests if not np.isnan(r.finish_t)]
+        done = self.finished
         return sum(r.met_slo for r in done) / max(len(done), 1)
 
     @property
     def mean_latency(self) -> float:
-        return float(np.mean([r.latency for r in self.requests]))
+        """Mean latency over FINISHED requests only — an unfinished request
+        has finish_t = NaN, which used to poison the whole mean. Check
+        ``unfinished`` to see how many were excluded."""
+        done = self.finished
+        return float(np.mean([r.latency for r in done])) if done \
+            else float("nan")
 
     def p_latency(self, q: float) -> float:
-        return float(np.quantile([r.latency for r in self.requests], q))
+        done = self.finished
+        return float(np.quantile([r.latency for r in done], q)) if done \
+            else float("nan")
 
     @property
     def tokens_per_s(self) -> float:
-        toks = sum(r.max_new_tokens for r in self.requests)
+        """Throughput over tokens actually emitted — counting
+        ``max_new_tokens`` overstated it whenever a request was unfinished
+        or retired early (e.g. at admission for single-token requests)."""
+        toks = sum(len(r.tokens_out or ()) for r in self.requests)
         return toks / self.modeled_time_s if self.modeled_time_s else 0.0
 
 
@@ -108,10 +137,25 @@ class ServingEngine:
     def __init__(self, tenants: Sequence[Tenant], mode: str = "vliw",
                  cost: Optional[CostModel] = None, max_group: int = 16,
                  sched_cfg: SchedulerConfig = SchedulerConfig(),
-                 plan_capacity: int = 128):
+                 plan_capacity: int = 128, declared_prefill: bool = True,
+                 prefill_declare_min: int = 16):
         assert mode in ("time", "batched", "vliw")
         self.tenants = {t.name: t for t in tenants}
         self.mode = mode
+        # vliw mode compiles dense tenants' prompt passes to KernelPrograms
+        # (prefill GEMMs enter the live op pool and coalesce across
+        # tenants); declared_prefill=False keeps the analytic serialized
+        # charge instead — the ablation baseline the prefill benchmark
+        # measures against. Baseline modes always charge analytically:
+        # that asymmetry IS the experiment.
+        self.declared_prefill = declared_prefill
+        # prompts shorter than this stay on the analytic charge even in
+        # vliw mode: their GEMMs sit in the same GEMV regime as a decode
+        # step (nothing tall to overlap) while a declared program still
+        # pays a per-stage dispatch on every layer — measurably worse on
+        # staggered short-prompt traces. 16 = the first prefill bucket
+        # above the m<=8 GEMV boundary.
+        self.prefill_declare_min = prefill_declare_min
         self.cost = cost or CostModel(TPUV5E)
         # plan_capacity bounds the JIT's persistent plan caches (program
         # templates + block plans); 0 = rebuild per step (baseline)
@@ -147,16 +191,42 @@ class ServingEngine:
         bytes_ = 2 * cfg.num_layers * cfg.num_kv_heads * mean_len * hd * 2 * m
         return bytes_ / self.cost.device.hbm_bw
 
+    def _prefill_attn_time(self, cfg: ModelConfig, prompt_len: int) -> float:
+        """KV write-back + causal attention streaming for one prompt
+        (memory-bound, the same accounting family as ``_attn_time``): the S
+        new K/V entries are written once and each query position streams
+        the prefix behind it (~S(S+1)/2 entries). Charged at prefill
+        completion on the declared path and folded into ``_prefill_time``
+        for the analytic one, so both paths model the same traffic."""
+        if cfg.is_attention_free:
+            return 0.0
+        hd = cfg.resolved_head_dim
+        s = prompt_len
+        per_entry = 2 * cfg.num_layers * cfg.num_kv_heads * hd * 2
+        return per_entry * (s + s * (s + 1) / 2.0) / self.cost.device.hbm_bw
+
     def _prefill_time(self, cfg: ModelConfig, prompt_len: int) -> float:
+        """Analytic serialized prompt cost: GEMMs + KV/attention traffic
+        (the latter used to be dropped, making prefill inconsistently
+        cheaper than ``_attn_time``-style decode accounting)."""
         t = 0.0
         for tag, shape in gemm_population(cfg, prompt_len):
             reps = 1 if tag == "unembed" else cfg.num_layers
             t += reps * self.cost.gemm_time(shape)
-        return t
+        return t + self._prefill_attn_time(cfg, prompt_len)
 
     # ------------------------------------------------------------------
     # admission
     # ------------------------------------------------------------------
+    def _make_prompt(self, tenant: Tenant, req: ServeRequest,
+                     rng: jax.Array) -> jax.Array:
+        """The request's synthetic prompt [1, prompt_len] — derived from
+        (rng, req_id) only, so every mode and prefill path sees the exact
+        same tokens."""
+        return jax.random.randint(jax.random.fold_in(rng, req.req_id),
+                                  (1, req.prompt_len), 0,
+                                  tenant.cfg.vocab_size)
+
     def _admit(self, tenant: Tenant, req: ServeRequest, rng: jax.Array,
                now: float) -> float:
         """Prefill ``req`` into the tenant. Returns the modeled prefill time
@@ -173,10 +243,7 @@ class ServingEngine:
         if needs_slot and not slots:
             return 0.0  # caller retries later
         m = tenant.model
-        prompt = jax.random.randint(jax.random.fold_in(rng, req.req_id),
-                                    (1, req.prompt_len), 0,
-                                    m.cfg.vocab_size)
-        pbatch = {"tokens": prompt}
+        pbatch = {"tokens": self._make_prompt(tenant, req, rng)}
         if m.cfg.arch_type == "vlm":
             pbatch["patch_embeds"] = jnp.zeros(
                 (1, m.cfg.num_patch_tokens, m.cfg.d_model), m.dtype)
@@ -256,6 +323,75 @@ class ServingEngine:
         return t.cfg.arch_type in ("dense", "vlm") \
             and not getattr(t.model, "kv_quant", False)
 
+    def _prefill_capable(self, t: Tenant) -> bool:
+        # declared prefill covers pure-dense tenants (a vlm prompt needs
+        # the patch-embed projector; it keeps the analytic charge)
+        return self.declared_prefill and t.cfg.arch_type == "dense" \
+            and self._jit_capable(t)
+
+    def _declare_prefill(self, t: Tenant, req: ServeRequest, rng: jax.Array,
+                         stream_id: int, now: float
+                         ) -> Optional[KernelProgram]:
+        """Compile+bind ``req``'s prompt pass as a prefill KernelProgram.
+
+        Returns None when the tenant has no free decode slot (the caller
+        keeps the request waiting). The slot is RESERVED here — legal
+        because the tenant admits nothing else and builds no decode program
+        while this program is inflight — but its token/cache state lands at
+        the completion event (``_on_prefill_complete``), not now: the
+        device hasn't executed anything yet on the virtual clock.
+
+        The program's deadline discounts the decode steps still to come
+        (mirroring ``_build_program``) so a long prompt inherits its
+        request's end-to-end urgency for EDF anchoring and the stagger
+        budget."""
+        needs_slot = req.max_new_tokens > 1
+        slots = [i for i, r in enumerate(t.slot_req) if r is None]
+        if needs_slot and not slots:
+            return None
+        s = req.prompt_len
+        assert s <= t.cache_len, (s, t.cache_len)
+        bucket = prefill_bucket(s)
+        prompt = self._make_prompt(t, req, rng)
+        padded = jnp.pad(prompt, ((0, 0), (0, bucket - s)))
+        template = self.jit.plan_cache.get_or_build(
+            prefill_program_cache_key(t.model, t.params, bucket, t.cache),
+            lambda: build_dense_prefill_template(t.model, t.params, bucket),
+            guard=(t.model, t.params),
+            group=("tenant-prefill", t.name, bucket))
+        final = req.arrival_t + req.slo_s
+        n_active = len(t.active_slots()) + (1 if needs_slot else 0)
+        step_t = self._ops_time(t.cfg, max(n_active, 1))
+        deadline = final - max(req.max_new_tokens - 1, 0) * step_t
+        if deadline <= now:
+            deadline = final
+        slot = slots[0] if needs_slot else None
+        prog = template.bind(
+            stream_id=stream_id, tokens=padded, cache=t.cache,
+            arrival_t=now, deadline_t=deadline,
+            req_deadlines=((req.req_id, final),),
+            env_extra={"real_len": s, "slot": slot, "req": req})
+        if needs_slot:
+            t.slot_req[slot] = req
+            t.slot_remaining[slot] = req.max_new_tokens - 1
+        return prog
+
+    def _on_prefill_complete(self, t: Tenant, prog: KernelProgram,
+                             now: float) -> Tuple[float, int]:
+        """Land a completed prefill: first token, KV slot state, traffic
+        charge. Returns (now, requests retired here)."""
+        req: ServeRequest = prog.env["req"]
+        tok = jnp.argmax(prog.env["logits"][0]).astype(jnp.int32)
+        req.tokens_out = [int(tok)]
+        now += self._prefill_attn_time(t.cfg, prog.env["real_len"])
+        slot = prog.env["slot"]
+        if slot is None:
+            req.finish_t = now     # single token: done at prefill, no slot
+            return now, 1
+        t.cache = prog.env["cache"]
+        t.slot_tok = t.slot_tok.at[slot, 0].set(tok)
+        return now, 0
+
     def _build_program(self, t: Tenant, stream_id: int, now: float
                        ) -> KernelProgram:
         """Bind the tenant's next decode step, carrying the tightest
@@ -285,8 +421,10 @@ class ServingEngine:
         reqs = [(t.slot_req[s], t.slot_remaining[s])
                 for s in t.active_slots()]
         # one full decode step (GEMMs + KV streaming; _ops_time includes
-        # _attn_time already)
-        step_t = self._ops_time(t.cfg, t.max_batch)
+        # _attn_time already) at the ACTIVE batch size — charging max_batch
+        # over-discounted partially-filled tenants' remaining-step
+        # deadlines, artificially shrinking their WAIT slack
+        step_t = self._ops_time(t.cfg, max(len(reqs), 1))
         finals = [r.arrival_t + r.slo_s for r, _ in reqs]
         step_deadlines = [f - max(rem - 1, 0) * step_t
                           for f, (_, rem) in zip(finals, reqs)]
@@ -315,12 +453,16 @@ class ServingEngine:
         total = len(pending)
         while True:
             progressed = False
-            # 1. live admission: prefill every due request into its tenant's
-            #    slotted cache (the device serializes on prefills). A tenant
-            #    with a program inflight (or full slots) admits at its next
-            #    step boundary — prefilling under an inflight program would
-            #    be clobbered by its write-back — but other tenants' due
-            #    requests are admitted past it, not blocked behind it.
+            # 1. live admission. Dense tenants DECLARE the prompt pass as a
+            #    prefill KernelProgram — its GEMMs join the live op pool and
+            #    coalesce with decode (and other tenants' prefill) traffic;
+            #    the tenant's decode joins only after its completion event.
+            #    Non-dense tenants keep the analytic serialized charge. A
+            #    tenant with a program inflight (or full slots) admits at
+            #    its next step boundary — prefilling under an inflight
+            #    program would be clobbered by its write-back — but other
+            #    tenants' due requests are admitted past it, not blocked
+            #    behind it.
             while pi < len(pending) and pending[pi].arrival_t <= now:
                 waiting.append(pending[pi])
                 pi += 1
@@ -329,6 +471,17 @@ class ServingEngine:
                 t = self.tenants[req.tenant]
                 if req.tenant in inflight:
                     still.append(req)
+                    continue
+                if self._prefill_capable(t) \
+                        and req.prompt_len >= self.prefill_declare_min:
+                    prog = self._declare_prefill(t, req, rng,
+                                                 stream_ids[req.tenant], now)
+                    if prog is None:
+                        still.append(req)  # tenant slots full; retry later
+                        continue
+                    inflight[req.tenant] = prog
+                    session.admit(prog)
+                    progressed = True
                     continue
                 dt = self._admit(t, req, rng, now)
                 if dt == 0.0 and req.tokens_out is None:
@@ -359,9 +512,17 @@ class ServingEngine:
             for prog in ev.completed:
                 t = self.tenants[id2name[prog.stream_id]]
                 del inflight[id2name[prog.stream_id]]
+                if prog.kind == "prefill":
+                    now, done = self._on_prefill_complete(t, prog, now)
+                    n_done += done
+                    continue
                 t.cache = prog.env["cache"]
                 self._consume(t, prog.env["logits"][:, None, :])
-                now += self._attn_time(t.cfg, t.max_batch)
+                # KV streaming charged at the ACTIVE batch size: idle slots
+                # have no cache rows to read, so charging max_batch
+                # over-billed partially-filled tenants
+                now += self._attn_time(t.cfg,
+                                       max(len(t.active_slots()), 1))
                 n_done += self._retire(t, now)
 
             # 4. non-JIT tenants interleave monolithic batched steps
@@ -379,6 +540,15 @@ class ServingEngine:
                     now = max(now, pending[pi].arrival_t)
                     continue
                 if not waiting:
+                    break
+                # stall guard: pending is exhausted, every waiting request
+                # was refused admission, and there is nothing inflight or
+                # decoding whose completion could change that — another
+                # iteration would see the identical state, so the loop must
+                # terminate (the requests stay unfinished and surface in
+                # ServeReport.unfinished) instead of spinning forever.
+                if not session.live and not inflight and not any(
+                        t.active_slots() for t in self.tenants.values()):
                     break
         self.jit_stats.merge(session.stats)
         return now

@@ -68,6 +68,30 @@ def two_wave_trace(wave1: Sequence[str], wave2: Sequence[str],
     return reqs
 
 
+def long_prompt_trace(tenants: Sequence[str], *, prompt_len: int = 256,
+                      max_new_tokens: int = 4, slo_s: float = 10.0,
+                      stagger_s: float = 0.0, n_per_tenant: int = 1,
+                      prompt_jitter: int = 0, seed: int = 0
+                      ) -> List[ServeRequest]:
+    """Deterministic long-prompt multi-tenant trace — the prefill-coalescing
+    fixture: every tenant submits ``n_per_tenant`` requests whose prompts
+    dominate the work (``prompt_len`` >> ``max_new_tokens``), interleaved
+    round-robin ``stagger_s`` apart so several tenants' prompt GEMMs are in
+    flight together. ``prompt_jitter`` draws per-request lengths from
+    [prompt_len - jitter, prompt_len] to exercise the prefill buckets."""
+    rng = np.random.default_rng(seed)
+    reqs: List[ServeRequest] = []
+    rid = 0
+    for wave in range(n_per_tenant):
+        for name in tenants:
+            plen = int(prompt_len - (rng.integers(0, prompt_jitter + 1)
+                                     if prompt_jitter else 0))
+            reqs.append(ServeRequest(rid, name, rid * stagger_s, plen,
+                                     max_new_tokens, slo_s))
+            rid += 1
+    return reqs
+
+
 def make_trace(tenants: Sequence[str], rate_hz: float, n_per_tenant: int,
                *, prompt_len: int = 32, max_new_tokens: int = 8,
                slo_s: float = 0.2, seed: int = 0, bursty: bool = False

@@ -191,7 +191,11 @@ def test_engine_cached_bit_identical_with_steady_state_hit_rate(dense_models):
                            max_new_tokens=steps + 1, slo_s=1.0)
     reps = {}
     for cap in (128, 0):     # cached vs rebuild-per-step baseline
-        eng = ServingEngine(tenants(), mode="vliw", plan_capacity=cap)
+        # analytic prefill: this test pins down the DECODE steady-state
+        # miss/hit counts; declared prefill adds its own (per-bucket)
+        # template traffic, covered in tests/test_prefill_coalescing.py
+        eng = ServingEngine(tenants(), mode="vliw", plan_capacity=cap,
+                            declared_prefill=False)
         reps[cap] = eng.run(copy.deepcopy(trace))
 
     # bit-identical token streams, cached vs uncached
