@@ -11,7 +11,8 @@ import sys
 import traceback
 
 from benchmarks.common import header
-from benchmarks import (e2e_slo_attainment, fig3_batch_utilization,
+from benchmarks import (dispatch_bench, e2e_slo_attainment,
+                        fig3_batch_utilization,
                         fig4_time_multiplexing, fig5_spatial_variance,
                         fig6_coalescing, fig7_clustering, plan_cache_bench,
                         prefill_coalescing_bench, rnn_gemv_coalescing,
@@ -29,6 +30,7 @@ MODULES = [
     ("e2e", e2e_slo_attainment),
     ("plan_cache", plan_cache_bench),
     ("prefill_coalescing", prefill_coalescing_bench),
+    ("dispatch", dispatch_bench),
 ]
 
 

@@ -52,7 +52,8 @@ def main() -> None:
                      f"mean_group={rep.jit.mean_group:.2f} "
                      f"waits={rep.jit.waits} "
                      f"mid_flight={rep.jit.mid_flight_admissions} "
-                     f"evictions={rep.jit.evictions}]")
+                     f"evictions={rep.jit.evictions} "
+                     f"wpack_hit={rep.jit.dispatch.weight_hit_rate:.0%}]")
         print(line)
 
     a = [r.tokens_out for r in sorted(results["time"].requests,

@@ -11,8 +11,10 @@ from repro.core.clustering import Cluster, cluster_greedy, group_ops_exact
 from repro.core.coalescer import Coalescer, SuperkernelPlan
 from repro.core.costmodel import (BlockConfig, CostModel, Device, GemmShape,
                                   TPUV5E, V100)
-from repro.core.kernelspec import KernelOp, gemm_population, make_op, \
-    stream_program, zoo_population
+from repro.core.dispatch import DispatchStats, SuperkernelExecutor
+from repro.core.kernelspec import (GEMV_MAX_ROWS, KernelOp, gemm_population,
+                                   make_op, op_aspect, stream_program,
+                                   zoo_population)
 from repro.core.plancache import PlanCache, PlanCacheStats
 from repro.core.scheduler import Decision, OoOScheduler, SchedulerConfig
 from repro.core.simulator import (POLICIES, Request, SimResult, make_requests,
@@ -21,10 +23,13 @@ from repro.core.simulator import (POLICIES, Request, SimResult, make_requests,
 
 __all__ = [
     "Autotuner", "BlockConfig", "Cluster", "Coalescer", "CostModel",
-    "Decision", "Device", "GemmShape", "KernelOp", "OoOScheduler",
+    "Decision", "Device", "DispatchStats", "GEMV_MAX_ROWS", "GemmShape",
+    "KernelOp", "OoOScheduler",
     "PlanCache", "PlanCacheStats", "POLICIES",
-    "Request", "SchedulerConfig", "SimResult", "SuperkernelPlan", "TPUV5E",
+    "Request", "SchedulerConfig", "SimResult", "SuperkernelExecutor",
+    "SuperkernelPlan", "TPUV5E",
     "TuneResult", "V100", "cluster_greedy", "gemm_population",
-    "group_ops_exact", "make_op", "make_requests", "simulate_space_mux",
+    "group_ops_exact", "make_op", "make_requests", "op_aspect",
+    "simulate_space_mux",
     "simulate_time_mux", "simulate_vliw", "stream_program", "zoo_population",
 ]

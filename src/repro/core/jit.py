@@ -44,6 +44,13 @@ steady-state ticks — and ``block_plans`` memoizes the coalescer's
 superkernel block choice per group signature. Per-session cache deltas are
 reported in ``JitStats.plan_cache`` / ``JitStats.block_plans``.
 
+Execution overhead stays off the critical path via the ``VLIWJit``-owned
+``SuperkernelExecutor`` (core/dispatch.py): packed weight operands are
+cached persistently (never re-staged in steady state), envelopes are
+bucketed to powers of two, and the whole pack→kernel→unpack dispatch is
+one jitted executable — so a stable trace runs zero-copy and zero-retrace
+after warmup (``JitStats.dispatch``).
+
 Correctness: running a program must produce bit-comparable results to the
 monolithic ``Model.decode_step`` (tests/test_jit_engine.py), regardless of
 admission timing (tests/test_event_loop.py).
@@ -52,6 +59,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import weakref
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple, Union
 
 import jax
@@ -60,10 +68,10 @@ import jax.numpy as jnp
 from repro.configs.base import ModelConfig
 from repro.core.coalescer import Coalescer
 from repro.core.costmodel import CostModel, GemmShape, TPUV5E
-from repro.core.kernelspec import make_op
+from repro.core.dispatch import DispatchStats, SuperkernelExecutor
+from repro.core.kernelspec import make_op, op_aspect
 from repro.core.plancache import PlanCache, PlanCacheStats
 from repro.core.scheduler import OoOScheduler, SchedulerConfig
-from repro.kernels.ops import execute_superkernel
 from repro.models.layers import rmsnorm, apply_rope
 
 
@@ -340,13 +348,47 @@ def _emit_dense_body(cfg: ModelConfig, params, stages: List[Stage], *,
         glue(post_ffn)
 
 
+# tied-embedding transposes, memoized per embed-array identity: every
+# template of one (model, params) — decode at any batch size, prefill at
+# any bucket — must hand out the SAME transposed array object, because the
+# dispatch executor's packed-weight cache guards on weight-array identity;
+# a per-template transpose would make batch-size alternation or
+# prefill/decode interleaving look like a weight hot-swap and repack the
+# model's largest matrix every flip. Both the embed and the transpose are
+# held WEAKLY: the transpose stays alive exactly as long as some template
+# closure references it, so discarding an engine/JIT frees its largest
+# matrices instead of a module-level cache pinning them process-wide. The
+# embed ref doubles as the id-recycling guard (a dead embed whose id is
+# reused can never serve a stale transpose — its ref reads None).
+_TIED_UNEMBED: Dict[int, Tuple["weakref.ref", "weakref.ref"]] = {}
+
+
+def _tied_unembed(params) -> jax.Array:
+    embed = params["embed"]
+    ent = _TIED_UNEMBED.get(id(embed))
+    if ent is not None:
+        e, wT = ent[0](), ent[1]()
+        if e is embed and wT is not None:
+            return wT
+    wT = embed.T
+    if len(_TIED_UNEMBED) > 64:            # prune dead refs opportunistically
+        for k in [k for k, (e, _) in _TIED_UNEMBED.items() if e() is None]:
+            del _TIED_UNEMBED[k]
+    _TIED_UNEMBED[id(embed)] = (weakref.ref(embed), weakref.ref(wT))
+    return wT
+
+
 def _emit_unembed(cfg: ModelConfig, params, stages: List[Stage], *,
                   m_rows: int) -> None:
     """Emit the unembedding GEMM over ``env['hf']`` into ``env['logits']``
     (shared by both builders; ``m_rows`` = the normed rows to unembed)."""
     pid = id(params)
     if cfg.tie_embeddings:
-        wfn, n = (lambda: params["embed"].T), int(params["embed"].shape[0])
+        # hoisted to template-build time AND shared across templates (see
+        # _TIED_UNEMBED above): one O(vocab·d) transpose per params, one
+        # stable array identity for the executor's weight guard
+        wT = _tied_unembed(params)
+        wfn, n = (lambda: wT), int(params["embed"].shape[0])
     else:
         wfn, n = (lambda: params["unembed"]), int(params["unembed"].shape[1])
     stages.append(GemmStage(
@@ -600,11 +642,50 @@ def build_dense_decode_program(model, params, tokens: jax.Array, cache,
 # ---------------------------------------------------------------------------
 
 @dataclasses.dataclass
+class StreamStat:
+    """Streaming aggregate (count/sum/min/max) over one per-superkernel
+    observable. Replaces the unbounded per-dispatch lists ``JitStats``
+    used to keep — memory grew linearly over long serving sessions —
+    while preserving ``mean_group`` and ``merge`` semantics (``+`` folds
+    two aggregates)."""
+
+    count: int = 0
+    total: float = 0.0
+    min: float = math.inf
+    max: float = -math.inf
+
+    def add(self, x: float) -> None:
+        self.count += 1
+        self.total += x
+        self.min = min(self.min, x)
+        self.max = max(self.max, x)
+
+    @classmethod
+    def of(cls, xs) -> "StreamStat":
+        s = cls()
+        for x in xs:
+            s.add(x)
+        return s
+
+    @property
+    def mean(self) -> float:
+        return self.total / self.count if self.count else 0.0
+
+    def __add__(self, other: "StreamStat") -> "StreamStat":
+        if not self.count:
+            return dataclasses.replace(other)
+        if not other.count:
+            return dataclasses.replace(self)
+        return StreamStat(self.count + other.count, self.total + other.total,
+                          min(self.min, other.min), max(self.max, other.max))
+
+
+@dataclasses.dataclass
 class JitStats:
     superkernels: int = 0
     ops_executed: int = 0
-    groups: List[int] = dataclasses.field(default_factory=list)
-    padding_waste: List[float] = dataclasses.field(default_factory=list)
+    groups: StreamStat = dataclasses.field(default_factory=StreamStat)
+    padding_waste: StreamStat = dataclasses.field(default_factory=StreamStat)
     modeled_time_s: float = 0.0
     modeled_serial_time_s: float = 0.0
     shared_dispatches: int = 0
@@ -630,10 +711,16 @@ class JitStats:
         default_factory=PlanCacheStats)
     block_plans: PlanCacheStats = dataclasses.field(
         default_factory=PlanCacheStats)
+    # jitted dispatch fast-path deltas (core/dispatch.py): packed-weight
+    # cache hits/misses/invalidations, retraces of the jitted
+    # pack+kernel+unpack, and weight bytes NOT re-staged thanks to the
+    # cache. DispatchStats supports ``+`` so merge() folds it like every
+    # other counter.
+    dispatch: DispatchStats = dataclasses.field(default_factory=DispatchStats)
 
     @property
     def mean_group(self) -> float:
-        return sum(self.groups) / len(self.groups) if self.groups else 0.0
+        return self.groups.mean
 
     @property
     def modeled_speedup(self) -> float:
@@ -680,14 +767,17 @@ class JitSession:
         self.live: Dict[int, Tuple[KernelProgram, GemmStage]] = {}
         self._done: List[KernelProgram] = []
         self._started = False          # True once the first tick has run
-        # plan caches outlive sessions (that is the point); snapshot their
-        # counters so this session's stats report only its own delta
+        # plan caches and the dispatch executor outlive sessions (that is
+        # the point); snapshot their counters so this session's stats
+        # report only its own delta
         self._plan_base = jit.plan_cache.stats.copy()
         self._block_base = jit.block_plans.stats.copy()
+        self._dispatch_base = jit.executor.stats.copy()
 
     def _sync_cache_stats(self) -> None:
         self.stats.plan_cache = self.jit.plan_cache.stats - self._plan_base
         self.stats.block_plans = self.jit.block_plans.stats - self._block_base
+        self.stats.dispatch = self.jit.executor.stats - self._dispatch_base
 
     @property
     def pending(self) -> int:
@@ -714,7 +804,9 @@ class JitSession:
     def _push_op(self, prog: KernelProgram, st: GemmStage) -> None:
         a = st.input_fn(prog.env)
         w = st.weight_fn()
-        op = make_op(prog.stream_id, "gemm" if a.shape[0] > 8 else "gemv",
+        # aspect boundary derived from the JIT's m-tile (kernelspec owns
+        # the classification) — a problem within one bm tile is a gemv
+        op = make_op(prog.stream_id, op_aspect(int(a.shape[0]), self.jit.bm),
                      GemmShape(m=int(a.shape[0]), n=int(w.shape[1]),
                                k=int(w.shape[0])),
                      arrival_t=prog.arrival_t,
@@ -750,16 +842,16 @@ class JitSession:
             return TickEvent("wait", decision.wait_until, completed=completed)
         assert decision.kind == "dispatch" and decision.plan
         plan = decision.plan
-        problems = [op.payload[:2] for op in plan.ops]
         wkeys = {op.payload[2] for op in plan.ops}
         shared = len(wkeys) == 1 and len(plan.ops) > 1
-        outs = execute_superkernel(problems, bm=self.jit.bm,
-                                   shared_operand=shared)
+        # the jitted dispatch fast path (core/dispatch.py): persistent
+        # packed weights + bucketed envelopes + compiled pack/kernel/unpack
+        outs = self.jit.executor.execute(plan.ops, shared_operand=shared)
         stats = self.stats
         stats.superkernels += 1
         stats.ops_executed += len(plan.ops)
-        stats.groups.append(len(plan.ops))
-        stats.padding_waste.append(plan.padding_waste)
+        stats.groups.add(len(plan.ops))
+        stats.padding_waste.add(plan.padding_waste)
         stats.shared_dispatches += int(shared)
         if len({op.stream_id for op in plan.ops}) > 1 \
                 and any(op.op_kind == "prefill" for op in plan.ops):
@@ -778,6 +870,9 @@ class JitSession:
                 completed.append(prog)
             else:
                 self._push_op(prog, nxt)
+        # re-sync after the dispatch so a session that ends on this tick
+        # still reports the executor/plan-cache work it just did
+        self._sync_cache_stats()
         return TickEvent("dispatch", now + t, dt=t, completed=completed)
 
 
@@ -787,7 +882,9 @@ class VLIWJit:
     def __init__(self, cost: Optional[CostModel] = None,
                  sched_cfg: SchedulerConfig = SchedulerConfig(),
                  max_group: int = 16, bm: int = 8,
-                 plan_capacity: int = 128):
+                 plan_capacity: int = 128,
+                 weight_capacity: Optional[int] = None,
+                 weight_budget_bytes: Optional[int] = 1 << 30):
         self.cost = cost or CostModel(TPUV5E)
         # persistent plan caches (core/plancache.py): program templates for
         # the serving hot path and superkernel block plans per coalesced
@@ -800,6 +897,18 @@ class VLIWJit:
                                    memo=self.block_plans)
         self.sched_cfg = sched_cfg
         self.bm = bm
+        # the jitted dispatch fast path (core/dispatch.py): packed weight
+        # operands cached across sessions, bucketed envelopes, compiled
+        # pack+kernel+unpack. Entries are full padded weight copies, so
+        # the entry-count bound (weight_capacity, default tracks
+        # plan_capacity; 0 = repack per dispatch, still jitted) does NOT
+        # bound memory at real model sizes — weight_budget_bytes does (LRU
+        # evicts past the byte budget, default 1 GiB; None = unbounded).
+        wcap = 2 * plan_capacity if weight_capacity is None else \
+            weight_capacity
+        self.weight_cache = PlanCache(wcap,
+                                      byte_capacity=weight_budget_bytes)
+        self.executor = SuperkernelExecutor(self.weight_cache, bm=bm)
 
     def session(self) -> JitSession:
         """Open an admission-open event-loop session (engine entry point)."""

@@ -71,6 +71,23 @@ class KernelOp:
         return self.deadline_t - self.arrival_t
 
 
+# Aspect boundary: a problem whose activation has at most this many rows is
+# a skinny "gemv" (one m-tile of the bm=8 decode superkernel), anything
+# taller is a "gemm". This is THE single source of truth — the JIT derives
+# the boundary from its configured m-tile (``VLIWJit.bm``) and raw op
+# streams fall back to this default; nothing else may hard-code the 8.
+GEMV_MAX_ROWS = 8
+
+
+def op_aspect(m: int, max_gemv_rows: int = GEMV_MAX_ROWS) -> str:
+    """Classify a problem's aspect ("gemv" vs "gemm") by its row count.
+
+    ``max_gemv_rows`` is the caller's m-tile: the JIT passes its ``bm`` so
+    the classification always matches how the superkernel will actually
+    tile the problem."""
+    return "gemv" if m <= max_gemv_rows else "gemm"
+
+
 _OP_COUNTER = itertools.count()
 
 
@@ -146,7 +163,7 @@ def stream_program(cfg: ModelConfig, stream_id: int, batch: int, *,
     body = [t for t in layer_ops if t[0] != "unembed"]
     for _layer in range(cfg.num_layers):
         for tag, shape in body:
-            kind = "gemv" if shape.m <= 8 else "gemm"
+            kind = op_aspect(shape.m)
             ops.append(make_op(stream_id, kind, shape, arrival_t=arrival_t,
                                deadline_t=arrival_t + slo_s, seq_index=seq,
                                tag=tag, model_id=cfg.name))

@@ -45,7 +45,7 @@ from __future__ import annotations
 
 import dataclasses
 from collections import OrderedDict
-from typing import Any, Callable, Dict, Hashable, Optional
+from typing import Any, Callable, Dict, Hashable, Optional, Tuple
 
 
 @dataclasses.dataclass
@@ -106,9 +106,17 @@ class PlanCache:
     ``guard`` / ``group`` / ``capacity`` semantics.
     """
 
-    def __init__(self, capacity: int = 128):
+    def __init__(self, capacity: int = 128,
+                 byte_capacity: Optional[int] = None):
         assert capacity >= 0
         self.capacity = capacity
+        # optional LRU budget over sum(value.nbytes): entry-count bounds
+        # are meaningless when values are full packed weight copies (one
+        # entry can be hundreds of MB at real model sizes). Values without
+        # an ``nbytes`` (block plans, templates) count as 0 — the byte
+        # budget only constrains array-valued caches.
+        self.byte_capacity = byte_capacity
+        self.bytes = 0
         self._entries: "OrderedDict[Hashable, _Entry]" = OrderedDict()
         self._group_key: Dict[Hashable, Hashable] = {}
         self.stats = PlanCacheStats()
@@ -122,10 +130,46 @@ class PlanCache:
     def keys(self):
         return list(self._entries)
 
+    @staticmethod
+    def _nbytes(entry: _Entry) -> int:
+        return int(getattr(entry.value, "nbytes", 0))
+
+    def _pop(self, key: Hashable) -> Optional[_Entry]:
+        entry = self._entries.pop(key, None)
+        if entry is not None:
+            self.bytes -= self._nbytes(entry)
+            self._forget_groups(key)
+        return entry
+
+    def _forget_groups(self, key: Hashable) -> None:
+        """Drop group mappings whose target entry no longer exists —
+        otherwise ``_group_key`` grows one tuple per group composition
+        ever seen (the hot dispatch path feeds per-group tags), and dead
+        mappings slow the key-change scan forever."""
+        dead = [g for g, k in self._group_key.items() if k == key]
+        for g in dead:
+            del self._group_key[g]
+
     # ------------------------------------------------------------------
     def get_or_build(self, key: Hashable, build: Callable[[], Any], *,
                      guard: Any = None, group: Optional[Hashable] = None
                      ) -> Any:
+        return self.get_or_build_flagged(key, build, guard=guard,
+                                         group=group)[0]
+
+    def get_or_build_flagged(self, key: Hashable, build: Callable[[], Any], *,
+                             guard: Any = None,
+                             group: Optional[Hashable] = None
+                             ) -> "Tuple[Any, bool]":
+        """``get_or_build`` that also reports whether the lookup HIT.
+
+        Callers that account avoided work per access (e.g. the dispatch
+        executor's bytes-not-copied counter) need the per-call outcome, not
+        just the aggregate stats delta."""
+        # capacity 0 stores nothing, so there are no entries for group
+        # tracking to invalidate — recording mappings would only leak
+        if group is not None and self.capacity == 0:
+            group = None
         if group is not None:
             old = self._group_key.get(group)
             if old is not None and old != key:
@@ -134,33 +178,42 @@ class PlanCache:
                 # drop it if no other group still resolves to it.
                 if not any(k == old for g, k in self._group_key.items()
                            if g != group):
-                    if self._entries.pop(old, None) is not None:
+                    if self._pop(old) is not None:
                         self.stats.invalidations += 1
             self._group_key[group] = key
         entry = self._entries.get(key)
         if entry is not None:
             if guard is not None and not _guard_matches(entry.guard, guard):
                 # identity guard tripped (weight hot-swap): stale plan
-                del self._entries[key]
+                self._pop(key)
                 self.stats.invalidations += 1
+                if group is not None:   # _pop swept the mapping set above
+                    self._group_key[group] = key
             else:
                 self._entries.move_to_end(key)
                 self.stats.hits += 1
-                return entry.value
+                return entry.value, True
         self.stats.misses += 1
         value = build()
         if self.capacity > 0:
-            self._entries[key] = _Entry(value, guard)
+            entry = _Entry(value, guard)
+            self._entries[key] = entry
             self._entries.move_to_end(key)
-            while len(self._entries) > self.capacity:
-                self._entries.popitem(last=False)
+            self.bytes += self._nbytes(entry)
+            while len(self._entries) > self.capacity or (
+                    self.byte_capacity is not None
+                    and self.bytes > self.byte_capacity
+                    and len(self._entries) > 1):   # keep the newest entry
+                k, dropped = self._entries.popitem(last=False)
+                self.bytes -= self._nbytes(dropped)
+                self._forget_groups(k)
                 self.stats.evictions += 1
-        return value
+        return value, False
 
     # ------------------------------------------------------------------
     def invalidate(self, key: Hashable) -> bool:
         """Explicitly drop one entry; returns whether it existed."""
-        if self._entries.pop(key, None) is not None:
+        if self._pop(key) is not None:
             self.stats.invalidations += 1
             return True
         return False
@@ -170,3 +223,4 @@ class PlanCache:
         self.stats.invalidations += len(self._entries)
         self._entries.clear()
         self._group_key.clear()
+        self.bytes = 0

@@ -3,7 +3,42 @@
 This is the layer the JIT engine (core/jit.py, serving/engine.py) calls:
 ``execute_superkernel`` takes a planned group of (activation, weight)
 problems, pads them to the cluster envelope, packs, dispatches the right
-Pallas kernel, and unpacks per-problem results.
+Pallas kernel, and unpacks per-problem results. The functions here are the
+**eager reference path**: every dispatch re-pads and re-stacks its weight
+operands and pays exact max-(K, N) envelopes. The serving hot path goes
+through ``core/dispatch.py``'s ``SuperkernelExecutor`` instead, which caches
+packed weights persistently and buckets envelopes so steady-state ticks hit
+JAX's compile cache; this module stays the bit-compatibility oracle those
+fast paths are tested against.
+
+Interpret mode
+--------------
+``REPRO_PALLAS_INTERPRET`` selects how every Pallas kernel in this package
+executes (read once at import):
+
+  * unset / ``1`` (default) — ``pl.pallas_call(interpret=True)``: the kernel
+    body runs as traced JAX ops on the host platform (CPU in this
+    container). Correctness-exact, required wherever no TPU is attached.
+  * ``0`` — compiled Mosaic kernels on a real TPU deployment.
+
+Envelope bucketing policy (used by core/dispatch.py)
+----------------------------------------------------
+``envelope_bucket`` rounds a packed-dimension extent up to the next power of
+two, floored at the 128-lane MXU tile — the same idea as ``prefill_bucket``
+(core/jit.py) applied to the superkernel envelope. The jitted dispatch path
+buckets every envelope extent — per-problem padded rows (multiples of
+``bm``, total m-tiles a power of two) and the shared K and N via this
+function; the problem/stacked-weight count G uses an UNfloored power-of-two
+bucket (``dispatch._pow2`` — a 128 floor there would stack 128 full weight
+copies per group) — so the number of distinct traced shapes stays finite
+under group-shape churn and a steady-state tick never retraces. Bucket
+padding is zeros: zero activation rows produce zero output rows (sliced
+off), zero K columns/rows contribute exact ``+0.0`` terms to the fp32
+accumulator, zero N columns and zero-padded weight slots are never read
+back — so any bucket ≥ the exact envelope is correct. Note that bucketing
+K beyond the eager path's exact 128-multiple envelope changes the fp32
+contraction split (last-ulp reassociation); see the correctness contract
+in core/dispatch.py.
 """
 from __future__ import annotations
 
@@ -19,14 +54,24 @@ from repro.kernels.coalesced_gemv import coalesced_gemv
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels import ref
 
-# On this container Pallas executes in interpret mode (CPU); on a real TPU
-# deployment set REPRO_PALLAS_INTERPRET=0.
+# See "Interpret mode" in the module docstring.
 import os
 INTERPRET = os.environ.get("REPRO_PALLAS_INTERPRET", "1") != "0"
 
 
 def _round_up(x: int, m: int) -> int:
     return ((x + m - 1) // m) * m
+
+
+def envelope_bucket(x: int, minimum: int = 128) -> int:
+    """Power-of-two bucket for one packed-envelope extent (≥ ``minimum``).
+
+    See "Envelope bucketing policy" in the module docstring; the jitted
+    dispatch path (core/dispatch.py) applies this to K, N and G so the
+    traced shape space stays finite over arbitrary group-shape churn.
+    """
+    assert x >= 1, x
+    return max(minimum, 1 << (x - 1).bit_length())
 
 
 @dataclasses.dataclass

@@ -63,9 +63,12 @@ def main() -> None:
                 f"SLO={rep.slo_attainment:5.1%}  "
                 f"tok/s={rep.tokens_per_s:9.0f}")
         if rep.jit:
+            d = rep.jit.dispatch
             line += (f"  [superkernels={rep.jit.superkernels} "
                      f"group={rep.jit.mean_group:.2f} "
-                     f"shared={rep.jit.shared_dispatches}]")
+                     f"shared={rep.jit.shared_dispatches} "
+                     f"wpack_hit={d.weight_hit_rate:.0%} "
+                     f"retraces={d.retraces}]")
         print(line)
 
 

@@ -1,10 +1,12 @@
-from repro.serving.engine import ServeReport, ServingEngine, Tenant
+from repro.serving.engine import (ArrivalPredictor, ServeReport,
+                                  ServingEngine, Tenant)
 from repro.serving.workload import (ServeRequest, bursty_arrivals,
                                     long_prompt_trace, make_trace,
                                     poisson_arrivals, two_wave_trace)
 
 __all__ = [
-    "ServeReport", "ServeRequest", "ServingEngine", "Tenant",
+    "ArrivalPredictor", "ServeReport", "ServeRequest", "ServingEngine",
+    "Tenant",
     "bursty_arrivals", "long_prompt_trace", "make_trace", "poisson_arrivals",
     "two_wave_trace",
 ]

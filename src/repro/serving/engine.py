@@ -133,12 +133,69 @@ class ServeReport:
         return toks / self.modeled_time_s if self.modeled_time_s else 0.0
 
 
+@dataclasses.dataclass
+class ArrivalPredictor:
+    """Per-tenant inter-arrival EWMA (ROADMAP "Arrival prediction").
+
+    The scheduler's stagger/WAIT branch needs ``next_arrival_t`` — on a
+    replayed trace the engine simply peeks at the trace, but live traffic
+    has no oracle. This estimator observes each tenant's admissions and
+    predicts the earliest next arrival across tenants:
+
+      * ``observe(tenant, t)`` folds the new inter-arrival gap into the
+        tenant's EWMA (``alpha`` weights the newest gap);
+      * ``predict(now)`` returns min over tenants of the expected next
+        arrival — ``last + gap`` while that is still in the future, else
+        ``now + gap`` (restart the clock: for a memoryless/Poisson flow
+        the expected residual wait is one mean gap regardless of how
+        overdue the arrival is). ``inf`` until at least one gap has been
+        seen, which leaves the scheduler's never-wait behavior untouched.
+    """
+
+    alpha: float = 0.2
+    _last: Dict[str, float] = dataclasses.field(default_factory=dict)
+    _gap: Dict[str, float] = dataclasses.field(default_factory=dict)
+
+    def observe(self, tenant: str, t: float) -> None:
+        last = self._last.get(tenant)
+        if last is not None and t >= last:
+            gap = t - last
+            prev = self._gap.get(tenant)
+            self._gap[tenant] = gap if prev is None else \
+                self.alpha * gap + (1.0 - self.alpha) * prev
+        self._last[tenant] = max(t, last) if last is not None else t
+
+    def reset(self) -> None:
+        """Forget all state. The engine calls this when a run's virtual
+        clock restarts at 0 — otherwise a reused engine's stored last-
+        arrival times (from the previous trace's end) sit AHEAD of every
+        new arrival, ``observe`` drops every gap, and the scheduler is fed
+        stagger hints from a dead workload forever."""
+        self._last.clear()
+        self._gap.clear()
+
+    def gap(self, tenant: str) -> float:
+        """The tenant's current EWMA inter-arrival gap (inf if unseen)."""
+        return self._gap.get(tenant, math.inf)
+
+    def predict(self, now: float) -> float:
+        est = math.inf
+        for tenant, gap in self._gap.items():
+            t_hat = self._last[tenant] + gap
+            if t_hat <= now:
+                t_hat = now + gap
+            est = min(est, t_hat)
+        return est
+
+
 class ServingEngine:
     def __init__(self, tenants: Sequence[Tenant], mode: str = "vliw",
                  cost: Optional[CostModel] = None, max_group: int = 16,
                  sched_cfg: SchedulerConfig = SchedulerConfig(),
                  plan_capacity: int = 128, declared_prefill: bool = True,
-                 prefill_declare_min: int = 16):
+                 prefill_declare_min: int = 16,
+                 predict_arrivals: bool = False,
+                 arrival_alpha: float = 0.2):
         assert mode in ("time", "batched", "vliw")
         self.tenants = {t.name: t for t in tenants}
         self.mode = mode
@@ -156,6 +213,14 @@ class ServingEngine:
         # staggered short-prompt traces. 16 = the first prefill bucket
         # above the m<=8 GEMV boundary.
         self.prefill_declare_min = prefill_declare_min
+        # predict_arrivals=True blinds the scheduler's stagger lookahead to
+        # the replay trace and feeds it the per-tenant inter-arrival EWMA
+        # instead — the non-replayed-traffic mode. Default (False) keeps
+        # the trace-driven oracle. The replay mechanics (when requests
+        # BECOME due) always follow the trace; only the scheduler's
+        # next-arrival hint changes.
+        self.predict_arrivals = predict_arrivals
+        self._arrival_pred = ArrivalPredictor(alpha=arrival_alpha)
         self.cost = cost or CostModel(TPUV5E)
         # plan_capacity bounds the JIT's persistent plan caches (program
         # templates + block plans); 0 = rebuild per step (baseline)
@@ -444,6 +509,10 @@ class ServingEngine:
 
     def _run_event_loop(self, pending: List[ServeRequest], rng: jax.Array
                         ) -> float:
+        # each run is a fresh virtual-clock epoch: arrival history from a
+        # previous trace describes a different workload (and would poison
+        # observe(), whose last-arrival times now sit past every new t)
+        self._arrival_pred.reset()
         session = self.jit.session()
         stream_ids = {name: i for i, name in enumerate(self.tenants)}
         id2name = {i: name for name, i in stream_ids.items()}
@@ -464,6 +533,9 @@ class ServingEngine:
             #    tenants' due requests are admitted past it, not blocked
             #    behind it.
             while pi < len(pending) and pending[pi].arrival_t <= now:
+                if self.predict_arrivals:
+                    self._arrival_pred.observe(pending[pi].tenant,
+                                               pending[pi].arrival_t)
                 waiting.append(pending[pi])
                 pi += 1
             still: List[ServeRequest] = []
@@ -492,8 +564,10 @@ class ServingEngine:
                     n_done += 1        # retired at admission (single token)
                 progressed = True
             waiting = still
-            session.set_next_arrival(pending[pi].arrival_t
-                                     if pi < len(pending) else math.inf)
+            session.set_next_arrival(
+                self._arrival_pred.predict(now) if self.predict_arrivals
+                else pending[pi].arrival_t if pi < len(pending)
+                else math.inf)
 
             # 2. every JIT-capable tenant with live requests keeps a program
             #    in the pool — admitted between dispatches, not per round

@@ -1,0 +1,504 @@
+"""The jitted dispatch fast path (core/dispatch.py): packed-weight cache
+bit-identity + hot-swap invalidation, envelope-bucket math, retrace-free
+steady-state ticks, aspect-from-bm classification, and the arrival-
+prediction EWMA."""
+import copy
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import smoke_config
+from repro.core import GemmShape, make_op, op_aspect
+from repro.core.dispatch import SuperkernelExecutor, trace_count
+from repro.core.jit import (VLIWJit, build_dense_decode_program,
+                            build_dense_decode_template)
+from repro.core.plancache import PlanCache
+from repro.kernels.ops import (coalesced_matvec, envelope_bucket,
+                               execute_superkernel)
+from repro.models import Model
+from repro.serving import (ArrivalPredictor, ServingEngine, Tenant,
+                           poisson_arrivals, two_wave_trace)
+
+
+def _rand(key, shape):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32)
+
+
+def _ops_for(problems, wkeys):
+    ops = []
+    for i, ((a, w), key) in enumerate(zip(problems, wkeys)):
+        op = make_op(i, "gemv", GemmShape(m=int(a.shape[0]),
+                                          n=int(w.shape[1]),
+                                          k=int(w.shape[0])))
+        op.payload = (a, w, key)
+        ops.append(op)
+    return ops
+
+
+# ---------------------------------------------------------------------------
+# envelope-bucket math
+# ---------------------------------------------------------------------------
+
+def test_envelope_bucket_math():
+    # floor at the 128-lane tile, then powers of two
+    assert envelope_bucket(1) == 128
+    assert envelope_bucket(128) == 128
+    assert envelope_bucket(129) == 256
+    assert envelope_bucket(256) == 256
+    assert envelope_bucket(257) == 512
+    assert envelope_bucket(513) == 1024
+    assert envelope_bucket(5, minimum=8) == 8
+    for x in range(1, 700):
+        b = envelope_bucket(x)
+        assert b >= max(x, 128) and (b & (b - 1)) == 0   # covering po2
+        assert b % 128 == 0                              # MXU-aligned
+
+
+# ---------------------------------------------------------------------------
+# bit-identity vs the eager reference path
+# ---------------------------------------------------------------------------
+
+def test_executor_bit_identical_to_eager_grouped():
+    """Power-of-two dims: bucketing is exact padding-with-zeros, so the
+    jitted fast path must be BIT-identical to the eager reference."""
+    probs = [(_rand(2 * i, (4, 128)), _rand(2 * i + 1, (128, 256)))
+             for i in range(3)]
+    ops = _ops_for(probs, [("w", i) for i in range(3)])
+    ex = SuperkernelExecutor(PlanCache(32), bm=8)
+    fast = ex.execute(ops)
+    ref = execute_superkernel(probs, bm=8)
+    for f, r in zip(fast, ref):
+        assert f.shape == r.shape
+        np.testing.assert_array_equal(np.asarray(f), np.asarray(r))
+
+
+def test_executor_matches_eager_ragged_dims():
+    """Non-power-of-two dims: the bucketed envelope (512) differs from the
+    eager exact envelope (384), so only numerical closeness is guaranteed
+    (zero padding is exact per accumulation step; the contraction length
+    differs)."""
+    probs = [(_rand(0, (5, 300)), _rand(1, (300, 200))),
+             (_rand(2, (11, 260)), _rand(3, (260, 190)))]
+    ops = _ops_for(probs, [("w", 0), ("w", 1)])
+    ex = SuperkernelExecutor(PlanCache(32), bm=8)
+    fast = ex.execute(ops)
+    ref = execute_superkernel(probs, bm=8)
+    for f, r in zip(fast, ref):
+        assert f.shape == r.shape
+        np.testing.assert_allclose(np.asarray(f), np.asarray(r),
+                                   rtol=1e-4, atol=1e-5)
+
+
+def test_executor_shared_operand_bit_identical():
+    w = _rand(9, (128, 256))
+    probs = [(_rand(i, (4, 128)), w) for i in range(4)]
+    ops = _ops_for(probs, [("shared-w",)] * 4)
+    ex = SuperkernelExecutor(PlanCache(32), bm=8)
+    fast = ex.execute(ops, shared_operand=True)
+    ref = execute_superkernel(probs, bm=8, shared_operand=True)
+    for f, r in zip(fast, ref):
+        assert f.shape == r.shape
+        np.testing.assert_array_equal(np.asarray(f), np.asarray(r))
+
+
+def test_executor_matvec_matches_eager():
+    xs = [_rand(i, (128,)) for i in range(4)]
+    ws_shared = [_rand(99, (128, 256))] * 4
+    ws_distinct = [_rand(50 + i, (128, 256)) for i in range(4)]
+    ex = SuperkernelExecutor(PlanCache(32), bm=8)
+    for ws in (ws_shared, ws_distinct):
+        fast = ex.matvec(xs, ws)
+        ref = coalesced_matvec(xs, ws)
+        for f, r in zip(fast, ref):
+            assert f.shape == r.shape
+            np.testing.assert_array_equal(np.asarray(f), np.asarray(r))
+    # the shared regime routed through the shared-operand GEMM fast path
+    assert ex.stats.dispatches == 2
+
+
+def test_executor_disabled_is_the_eager_path():
+    probs = [(_rand(0, (4, 128)), _rand(1, (128, 128)))]
+    ops = _ops_for(probs, [("w", 0)])
+    ex = SuperkernelExecutor(PlanCache(32), bm=8, enabled=False)
+    fast = ex.execute(ops)
+    ref = execute_superkernel(probs, bm=8)
+    np.testing.assert_array_equal(np.asarray(fast[0]), np.asarray(ref[0]))
+    assert ex.stats.dispatches == 0       # ablation path counts nothing
+
+
+# ---------------------------------------------------------------------------
+# the persistent packed-weight cache
+# ---------------------------------------------------------------------------
+
+def test_weight_pack_cache_hits_and_bytes_not_copied():
+    probs = [(_rand(2 * i, (4, 128)), _rand(2 * i + 1, (128, 256)))
+             for i in range(3)]
+    ops = _ops_for(probs, [("w", i) for i in range(3)])
+    ex = SuperkernelExecutor(PlanCache(32), bm=8)
+    first = ex.execute(ops)
+    assert ex.stats.weight_misses == 1 and ex.stats.weight_hits == 0
+    assert ex.stats.bytes_not_copied == 0
+    steps = 5
+    for _ in range(steps):
+        again = ex.execute(ops)
+    assert ex.stats.weight_hits == steps          # every re-dispatch hits
+    assert ex.stats.weight_hit_rate >= steps / (steps + 1)
+    # hits count the packed operand bytes NOT re-staged: G_pad × K × N fp32
+    assert ex.stats.bytes_not_copied == steps * 4 * 128 * 256 * 4
+    for f, r in zip(again, first):
+        np.testing.assert_array_equal(np.asarray(f), np.asarray(r))
+
+
+def test_weight_hot_swap_invalidates_and_recomputes():
+    """Same weight keys, NEW weight arrays (a hot-swap): the identity guard
+    must trip — counted as an invalidation — and the outputs must reflect
+    the new weights, never the cached stale pack."""
+    a = _rand(0, (4, 128))
+    old_w, new_w = _rand(1, (128, 128)), _rand(2, (128, 128))
+    keys = [("tenant", 0, "ffn")]
+    ex = SuperkernelExecutor(PlanCache(32), bm=8)
+    ex.execute(_ops_for([(a, old_w)], keys))
+    ex.execute(_ops_for([(a, old_w)], keys))
+    assert ex.stats.weight_hits == 1
+    swapped = ex.execute(_ops_for([(a, new_w)], keys))
+    assert ex.stats.weight_invalidations == 1
+    assert ex.stats.weight_hits == 1              # swap was NOT a hit
+    ref = execute_superkernel([(a, new_w)], bm=8)
+    np.testing.assert_array_equal(np.asarray(swapped[0]),
+                                  np.asarray(ref[0]))
+
+
+def test_key_changing_hot_swap_drops_stale_pack():
+    """The serving hot-swap path replaces the params tree, so every weight
+    key embeds a NEW id(params) — a different cache key. The dispatch
+    slot's params-free group tag must eagerly drop the superseded packed
+    entry (which pins the old weight arrays) instead of letting stale
+    generations pile up until LRU pressure."""
+    a = _rand(0, (4, 128))
+    old_w, new_w = _rand(1, (128, 128)), _rand(2, (128, 128))
+    cache = PlanCache(32)
+    ex = SuperkernelExecutor(cache, bm=8)
+
+    def ops_with(w, pid):
+        # same stream/tag/seq (same logical slot), pid-bearing weight key
+        op = make_op(0, "gemv", GemmShape(m=4, n=128, k=128), tag="ffn",
+                     seq_index=3)
+        op.payload = (a, w, ("arch", pid, 3, "ffn"))
+        return [op]
+
+    ex.execute(ops_with(old_w, 111))
+    assert len(cache) == 1
+    swapped = ex.execute(ops_with(new_w, 222))   # hot-swap: new key
+    assert len(cache) == 1                       # stale pack dropped, not 2
+    assert ex.stats.weight_invalidations == 1
+    ref = execute_superkernel([(a, new_w)], bm=8)
+    np.testing.assert_array_equal(np.asarray(swapped[0]),
+                                  np.asarray(ref[0]))
+
+
+def test_dispatch_order_insensitive_weight_cache():
+    """The scheduler reorders a group's ops by urgency tick to tick; the
+    packed-weight key and group tag must be canonical so an order flip is
+    a HIT on the same entry, with outputs restored to call order."""
+    pa = (_rand(0, (4, 128)), _rand(1, (128, 128)))
+    pb = (_rand(2, (4, 128)), _rand(3, (128, 128)))
+    cache = PlanCache(32)
+    ex = SuperkernelExecutor(cache, bm=8)
+
+    def ops_in(order):
+        out = []
+        for (a, w), sid, key in order:
+            op = make_op(sid, "gemv", GemmShape(m=4, n=128, k=128),
+                         tag="ffn", seq_index=1)
+            op.payload = (a, w, key)
+            out.append(op)
+        return out
+
+    fwd = ex.execute(ops_in([(pa, 0, ("w", 0)), (pb, 1, ("w", 1))]))
+    rev = ex.execute(ops_in([(pb, 1, ("w", 1)), (pa, 0, ("w", 0))]))
+    assert len(cache) == 1                       # one entry, both orders
+    assert ex.stats.weight_hits == 1             # the flip HIT it
+    # outputs follow CALL order: rev[0] is B's result, rev[1] is A's
+    np.testing.assert_array_equal(np.asarray(rev[0]), np.asarray(fwd[1]))
+    np.testing.assert_array_equal(np.asarray(rev[1]), np.asarray(fwd[0]))
+
+
+def test_group_map_pruned_with_entries():
+    """_group_key mappings must die with their entries — the dispatch path
+    feeds one tuple per group composition, which would otherwise grow
+    forever over a long serving session."""
+    cache = PlanCache(capacity=2)
+    for i in range(6):
+        cache.get_or_build(("k", i), lambda i=i: i, group=("slot", i))
+    assert len(cache) == 2
+    assert len(cache._group_key) <= 2            # evicted keys took their
+    assert cache.stats.evictions == 4            # mappings with them
+
+
+def test_weight_cache_byte_budget_bounds_memory():
+    """Entries are full packed weight copies, so the cache must bound
+    BYTES, not just entry count: inserting past the byte budget evicts
+    LRU entries (keeping at least the newest)."""
+    budget = 3 * 128 * 128 * 4            # room for ~3 stacked [1,128,128]
+    cache = PlanCache(capacity=64, byte_capacity=budget)
+    ex = SuperkernelExecutor(cache, bm=8)
+    a = _rand(0, (4, 128))
+    for i in range(6):                    # 6 DISTINCT dispatch slots
+        w = _rand(10 + i, (128, 128))
+        op = make_op(i, "gemv", GemmShape(m=4, n=128, k=128), tag=f"s{i}")
+        op.payload = (a, w, ("w", i))
+        ex.execute([op])
+    assert cache.bytes <= budget
+    assert cache.stats.evictions >= 3     # LRU reclaimed the overflow
+    assert len(cache) >= 1                # newest entry always retained
+    probs = [(_rand(0, (4, 128)), _rand(1, (128, 128)))]
+    ex = SuperkernelExecutor(PlanCache(0), bm=8)
+    for _ in range(3):
+        ex.execute(_ops_for(probs, [("w", 0)]))
+    assert ex.stats.weight_hits == 0 and ex.stats.weight_misses == 3
+
+
+# ---------------------------------------------------------------------------
+# retrace-free steady state
+# ---------------------------------------------------------------------------
+
+def test_executor_zero_retraces_after_warmup():
+    probs = [(_rand(2 * i, (4, 128)), _rand(2 * i + 1, (128, 256)))
+             for i in range(3)]
+    ex = SuperkernelExecutor(PlanCache(32), bm=8)
+    ex.execute(_ops_for(probs, [("w", i) for i in range(3)]))
+    warm = ex.stats.retraces
+    for _ in range(4):
+        ex.execute(_ops_for(probs, [("w", i) for i in range(3)]))
+    assert ex.stats.retraces == warm      # steady state: zero new traces
+
+
+def test_group_churn_stays_inside_the_buckets():
+    """Group-size churn within one (G, m-tile) bucket must not retrace:
+    5..8 problems of the same shape all bucket to G_pad=8 / 8 m-tiles."""
+    probs = [(_rand(2 * i, (4, 128)), _rand(2 * i + 1, (128, 256)))
+             for i in range(8)]
+    wkeys = [("w", i) for i in range(8)]
+    ex = SuperkernelExecutor(PlanCache(32), bm=8)
+    ex.execute(_ops_for(probs, wkeys))    # warm the g=8 bucket
+    warm = ex.stats.retraces
+    for g in (7, 6, 5, 8, 6):
+        ex.execute(_ops_for(probs[:g], wkeys[:g]))
+    assert ex.stats.retraces == warm
+
+
+def test_steady_state_ticks_zero_retraces(rng):
+    """The acceptance assertion at the JIT level: after a warmup run, a
+    second session over rebound programs of the same shapes must not trace
+    a single jitted dispatch body (trace-counter delta == 0), and every
+    weight pack must be served from the persistent cache."""
+    cfg = smoke_config("gemma3-1b")
+    m = Model(cfg, param_dtype=jnp.float32)
+    params = m.init(rng)
+    batch = {"tokens": jax.random.randint(rng, (2, 12), 0, cfg.vocab_size)}
+    _, cache = m.prefill(params, batch, cache_len=32)
+    tok = jax.random.randint(jax.random.fold_in(rng, 9), (2, 1), 0,
+                             cfg.vocab_size)
+
+    jit = VLIWJit(max_group=8)
+    # the serving hot path: the template is compiled ONCE (plan cache) and
+    # each steady-state tick only rebinds the per-step env — which is what
+    # keeps the weight-array identities (and so the packed-weight guard)
+    # stable across ticks
+    template = build_dense_decode_template(m, params, 2)
+
+    def progs():
+        return [template.bind(stream_id=i, tokens=tok, cache=cache)
+                for i in range(3)]
+
+    warm_stats = jit.run(progs())          # warmup: traces + weight packs
+    assert warm_stats.dispatch.weight_misses > 0
+    before = trace_count()
+    steady = jit.run(progs())
+    assert trace_count() == before         # not one retrace in steady state
+    assert steady.dispatch.retraces == 0
+    assert steady.dispatch.weight_misses == 0
+    assert steady.dispatch.weight_hit_rate == 1.0
+    assert steady.dispatch.bytes_not_copied > 0
+
+
+# ---------------------------------------------------------------------------
+# aspect classification derives from the JIT's m-tile
+# ---------------------------------------------------------------------------
+
+def test_op_aspect_boundary():
+    assert op_aspect(1) == "gemv" and op_aspect(8) == "gemv"
+    assert op_aspect(9) == "gemm"
+    assert op_aspect(9, max_gemv_rows=16) == "gemv"
+    assert op_aspect(17, max_gemv_rows=16) == "gemm"
+
+
+def test_push_op_aspect_from_jit_bm(rng):
+    """_push_op must classify gemv-vs-gemm from the JIT's configured bm,
+    not a hard-coded 8 (regression: batch-4 rows were 'gemv' under ANY
+    tile size)."""
+    cfg = smoke_config("gemma3-1b")
+    m = Model(cfg, param_dtype=jnp.float32)
+    params = m.init(rng)
+    batch = {"tokens": jax.random.randint(rng, (4, 12), 0, cfg.vocab_size)}
+    _, cache = m.prefill(params, batch, cache_len=32)
+    tok = jax.random.randint(jax.random.fold_in(rng, 9), (4, 1), 0,
+                             cfg.vocab_size)
+    kinds = {}
+    for bm in (2, 8):
+        session = VLIWJit(max_group=8, bm=bm).session()
+        session.admit(build_dense_decode_program(m, params, tok, cache,
+                                                 stream_id=0))
+        (op,) = session.sched.ready
+        kinds[bm] = op.kind
+    assert kinds == {2: "gemm", 8: "gemv"}   # 4 rows vs the tile boundary
+
+
+# ---------------------------------------------------------------------------
+# engine integration: token identity + stats plumbing
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def dense_pair():
+    out = {}
+    for arch, seed in (("gemma3-1b", 1), ("yi-9b", 2)):
+        cfg = smoke_config(arch)
+        m = Model(cfg, param_dtype=jnp.float32)
+        out[arch] = (m, m.init(jax.random.PRNGKey(seed)))
+    return out
+
+
+def _tokens(rep):
+    return [r.tokens_out for r in sorted(rep.requests,
+                                         key=lambda r: r.req_id)]
+
+
+def _two_tenants(dense_pair):
+    m1, p1 = dense_pair["gemma3-1b"]
+    m2, p2 = dense_pair["yi-9b"]
+    return [Tenant("a", m1, p1, cache_len=32, max_batch=2),
+            Tenant("b", m2, p2, cache_len=32, max_batch=2)]
+
+
+def test_engine_cached_dispatch_token_identity(dense_pair):
+    """The serving acceptance: the jitted cached dispatch path must emit
+    bit-identical greedy tokens to the eager reference path, with the
+    DispatchStats plumbed through JitStats."""
+    trace = two_wave_trace(["a"], ["b"], 1e-5, prompt_len=8,
+                           max_new_tokens=4, slo_s=1.0)
+    reps = {}
+    for name, enabled in (("eager", False), ("jitted", True)):
+        eng = ServingEngine(_two_tenants(dense_pair), mode="vliw")
+        eng.jit.executor.enabled = enabled
+        reps[name] = eng.run(copy.deepcopy(trace))
+    assert _tokens(reps["eager"]) == _tokens(reps["jitted"])
+    d = reps["jitted"].jit.dispatch
+    assert d.dispatches == reps["jitted"].jit.superkernels
+    assert d.weight_hits + d.weight_misses == d.dispatches
+    assert d.weight_hits > 0 and d.bytes_not_copied > 0
+    # the eager ablation records nothing through the fast path
+    assert reps["eager"].jit.dispatch.dispatches == 0
+
+
+def test_engine_predict_arrivals_flag(dense_pair):
+    """predict_arrivals=True blinds the scheduler to the replay trace and
+    feeds the EWMA instead — scheduling hints change, tokens must not."""
+    trace = two_wave_trace(["a"], ["b"], 1e-5, prompt_len=8,
+                           max_new_tokens=4, slo_s=1.0)
+    reps = {}
+    for name, kw in (("replay", {}), ("ewma", dict(predict_arrivals=True))):
+        eng = ServingEngine(_two_tenants(dense_pair), mode="vliw", **kw)
+        assert eng.predict_arrivals == bool(kw)   # defaults to trace-driven
+        reps[name] = eng.run(copy.deepcopy(trace))
+    assert _tokens(reps["replay"]) == _tokens(reps["ewma"])
+
+
+# ---------------------------------------------------------------------------
+# the arrival-prediction EWMA
+# ---------------------------------------------------------------------------
+
+def test_ewma_converges_on_poisson_trace():
+    rate = 50.0
+    rng = np.random.default_rng(7)
+    pred = ArrivalPredictor(alpha=0.05)
+    last = 0.0
+    for t in poisson_arrivals(rate, 800, rng):
+        pred.observe("t1", t)
+        last = t
+    # the EWMA gap estimate converges to the mean inter-arrival 1/rate
+    assert pred.gap("t1") == pytest.approx(1.0 / rate, rel=0.35)
+    # prediction is a strictly future instant once a gap is known
+    assert pred.predict(last) > last
+    # an overdue estimate restarts the clock (memoryless) instead of
+    # handing the scheduler a stale past instant
+    far = last + 100.0
+    assert pred.predict(far) == pytest.approx(far + pred.gap("t1"))
+
+
+def test_ewma_unseen_tenants_never_wait():
+    pred = ArrivalPredictor()
+    assert pred.predict(0.0) == math.inf
+    pred.observe("t1", 1.0)               # one arrival: no gap yet
+    assert pred.predict(2.0) == math.inf
+    assert pred.gap("t1") == math.inf
+
+
+def test_ewma_reset_survives_clock_restart():
+    """A reused engine's runs each restart the virtual clock at 0; without
+    a reset the stored last-arrival (end of run 1) sits ahead of every new
+    arrival and observe() silently drops all of run 2's gaps."""
+    pred = ArrivalPredictor(alpha=0.5)
+    for t in (1.0, 2.0, 3.0):
+        pred.observe("t1", t)
+    assert pred.gap("t1") == pytest.approx(1.0)
+    pred.reset()
+    assert pred.predict(0.0) == math.inf
+    for t in (0.1, 0.3):                  # the new epoch IS observed
+        pred.observe("t1", t)
+    assert pred.gap("t1") == pytest.approx(0.2)
+
+
+def test_engine_run_resets_predictor(dense_pair):
+    trace = two_wave_trace(["a"], ["b"], 1e-5, prompt_len=8,
+                           max_new_tokens=2, slo_s=1.0)
+    eng = ServingEngine(_two_tenants(dense_pair), mode="vliw",
+                        predict_arrivals=True)
+    eng.run(copy.deepcopy(trace))
+    eng.run(copy.deepcopy(trace))         # second epoch on the same engine
+    # the predictor reflects the SECOND run's trace, not a poisoned merge
+    assert all(t <= 1e-5 for t in eng._arrival_pred._last.values())
+
+
+# ---------------------------------------------------------------------------
+# tied-embedding weight identity across templates
+# ---------------------------------------------------------------------------
+
+def _unembed_weight(template):
+    from repro.core.jit import GemmStage
+    stage = [s for s in template.stages
+             if isinstance(s, GemmStage) and s.tag == "unembed"][-1]
+    return stage.weight_fn()
+
+
+def test_tied_unembed_identity_across_templates(rng):
+    """Every template of one (model, params) — decode at any batch,
+    prefill at any bucket — must hand out the SAME transposed unembed
+    array: a per-template transpose makes batch alternation look like a
+    weight hot-swap to the packed-weight guard and repacks the model's
+    largest matrix every flip."""
+    from repro.core.jit import build_dense_prefill_template
+    cfg = smoke_config("gemma3-1b")
+    assert cfg.tie_embeddings
+    m = Model(cfg, param_dtype=jnp.float32)
+    params = m.init(rng)
+    w2 = _unembed_weight(build_dense_decode_template(m, params, 2))
+    w4 = _unembed_weight(build_dense_decode_template(m, params, 4))
+    wp = _unembed_weight(build_dense_prefill_template(m, params, 16))
+    assert w2 is w4 and w2 is wp
+    # a hot-swap (new params) must NOT share the transpose
+    params2 = m.init(jax.random.fold_in(rng, 1))
+    assert _unembed_weight(build_dense_decode_template(m, params2, 2)) \
+        is not w2

@@ -11,7 +11,8 @@ import pytest
 from repro.configs import smoke_config
 from repro.core import (Coalescer, CostModel, GemmShape, OoOScheduler,
                         SchedulerConfig, V100, make_op)
-from repro.core.jit import JitStats, VLIWJit, build_dense_decode_program
+from repro.core.jit import (JitStats, StreamStat, VLIWJit,
+                            build_dense_decode_program)
 from repro.models import Model
 from repro.serving import ServingEngine, Tenant, two_wave_trace
 
@@ -64,18 +65,23 @@ def test_scheduler_evicts_missed_stragglers():
 
 
 def test_jitstats_merge():
-    a = JitStats(superkernels=2, ops_executed=5, groups=[2, 3],
-                 padding_waste=[0.1], modeled_time_s=1.0,
+    a = JitStats(superkernels=2, ops_executed=5, groups=StreamStat.of([2, 3]),
+                 padding_waste=StreamStat.of([0.1]), modeled_time_s=1.0,
                  modeled_serial_time_s=2.0, shared_dispatches=1, waits=1,
                  evictions=2, mid_flight_admissions=3)
-    b = JitStats(superkernels=1, ops_executed=1, groups=[1],
-                 padding_waste=[0.0], modeled_time_s=0.5,
+    b = JitStats(superkernels=1, ops_executed=1, groups=StreamStat.of([1]),
+                 padding_waste=StreamStat.of([0.0]), modeled_time_s=0.5,
                  modeled_serial_time_s=0.5, shared_dispatches=0, waits=2,
                  evictions=0, mid_flight_admissions=1)
     out = a.merge(b)
     assert out is a
     assert a.superkernels == 3 and a.ops_executed == 6
-    assert a.groups == [2, 3, 1] and a.padding_waste == [0.1, 0.0]
+    # groups/padding_waste are streaming aggregates, not unbounded lists —
+    # the merge must fold count/sum/min/max and preserve mean_group
+    assert a.groups == StreamStat.of([2, 3, 1])
+    assert a.mean_group == pytest.approx(2.0)
+    assert a.padding_waste == StreamStat.of([0.1, 0.0])
+    assert (a.padding_waste.min, a.padding_waste.max) == (0.0, 0.1)
     assert a.modeled_time_s == 1.5 and a.modeled_serial_time_s == 2.5
     assert a.shared_dispatches == 1 and a.waits == 3
     assert a.evictions == 2 and a.mid_flight_admissions == 4
