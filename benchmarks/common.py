@@ -1,9 +1,14 @@
 """Shared benchmark helpers. Every benchmark prints ``name,us_per_call,
-derived`` CSV rows (one per measured configuration)."""
+derived`` CSV rows (one per measured configuration), and may additionally
+persist a machine-readable JSON summary (``write_summary``) — CI uploads
+the summary directory as a workflow artifact so the perf trajectory is
+inspectable per commit."""
 from __future__ import annotations
 
+import json
+import os
 import time
-from typing import Callable, List, Tuple
+from typing import Any, Callable, Dict, List, Tuple
 
 import jax
 
@@ -13,6 +18,23 @@ ROWS: List[Tuple[str, float, str]] = []
 def emit(name: str, us_per_call: float, derived: str) -> None:
     ROWS.append((name, us_per_call, derived))
     print(f"{name},{us_per_call:.3f},{derived}")
+
+
+def write_summary(name: str, data: Dict[str, Any]) -> str:
+    """Persist one benchmark's JSON summary.
+
+    Written to ``$BENCH_SUMMARY_DIR`` (default ``bench-summaries/`` under
+    the current directory); CI uploads that directory as a workflow
+    artifact. Values must be JSON-serializable — keep them to the scalar
+    acceptance numbers (speedups, hit rates, coalesced-group counts), not
+    raw traces."""
+    out_dir = os.environ.get("BENCH_SUMMARY_DIR", "bench-summaries")
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, f"{name}.json")
+    with open(path, "w") as f:
+        json.dump(data, f, indent=2, sort_keys=True)
+        f.write("\n")
+    return path
 
 
 def time_jax(fn: Callable, *args, iters: int = 5, warmup: int = 2) -> float:

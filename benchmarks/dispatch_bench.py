@@ -32,9 +32,9 @@ import jax
 import jax.numpy as jnp
 
 try:                                     # via the run.py harness
-    from benchmarks.common import emit, header
+    from benchmarks.common import emit, header, write_summary
 except ImportError:                      # standalone: python benchmarks/...
-    from common import emit, header
+    from common import emit, header, write_summary
 
 from repro.configs import smoke_config
 from repro.core import GemmShape, make_op
@@ -175,6 +175,12 @@ def check(results, tokens_ok: bool, steps: int, *,
         print("FAIL: cached dispatch changed greedy tokens vs the eager "
               "reference", file=sys.stderr)
         ok = False
+    write_summary("dispatch", {
+        "ok": ok, "steps": steps, "stable_speedup": speedup,
+        "weight_hit_rate": d.weight_hit_rate,
+        "bytes_not_copied": d.bytes_not_copied,
+        "post_warmup_retraces": retraces, "tokens_identical": tokens_ok,
+    })
     return ok
 
 

@@ -1,0 +1,138 @@
+"""MoE coalescing benchmark: non-dense tenants through the JIT (ISSUE 5
+acceptance). A heterogeneous fleet — 2 MoE tenants + 2 dense tenants —
+decodes concurrently; in vliw mode every tenant's step compiles to a
+KernelProgram, so the MoE tenants' per-expert FFN GEMMs enter the live op
+pool and coalesce with the other tenants' traffic (the multi-model
+spatio-temporal multiplexing scenario D-STACK and the multi-tenant GPU
+inference surveys identify as where space-only/time-only sharing loses
+most).
+
+Acceptance (checked by ``run()`` / ``main()``; ``--quick`` is the CI smoke
+gate — both modes exit nonzero on failure):
+
+  * greedy tokens bit-identical between the vliw and batched engines
+    (token divergence fails the run),
+  * at least one dispatched superkernel group packs an MoE expert GEMM
+    together with ANOTHER tenant's op (``JitStats.expert_coalesced >= 1``;
+    zero cross-tenant expert-GEMM coalesced groups fails the run),
+  * every MoE/SSM-capable step went through the JIT
+    (``JitStats.nondense_programs`` covers all MoE decode steps — the
+    monolithic ``_tenant_batched_step`` fallback path fails the run).
+
+Also reports the modeled makespan of both modes and writes the JSON
+summary CI uploads as a workflow artifact.
+
+Run:  PYTHONPATH=src python benchmarks/moe_coalescing_bench.py [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import copy
+import sys
+
+import jax
+import jax.numpy as jnp
+
+try:                                     # via the run.py harness
+    from benchmarks.common import emit, header, write_summary
+except ImportError:                      # standalone: python benchmarks/...
+    from common import emit, header, write_summary
+
+from repro.configs import smoke_config
+from repro.models import Model
+from repro.serving import ServeRequest, ServingEngine, Tenant
+
+
+def _tokens(rep):
+    return [r.tokens_out for r in sorted(rep.requests,
+                                         key=lambda r: r.req_id)]
+
+
+def _tenants():
+    out = []
+    for name, arch, seed in (("moe-a", "grok-1-314b", 1),
+                             ("moe-b", "grok-1-314b", 2),
+                             ("dense-a", "gemma3-1b", 3),
+                             ("dense-b", "yi-9b", 4)):
+        cfg = smoke_config(arch)
+        m = Model(cfg, param_dtype=jnp.float32)
+        out.append(Tenant(name, m, m.init(jax.random.PRNGKey(seed)),
+                          cache_len=32, max_batch=2))
+    return out
+
+
+def bench(max_new_tokens: int, n_per_tenant: int):
+    names = ["moe-a", "moe-b", "dense-a", "dense-b"]
+    trace = [ServeRequest(rid, name, rid * 1e-6, 8, max_new_tokens, 10.0)
+             for rid, name in enumerate(
+                 n for _ in range(n_per_tenant) for n in names)]
+    reps = {}
+    for mode in ("batched", "vliw"):
+        eng = ServingEngine(_tenants(), mode=mode)
+        reps[mode] = eng.run(copy.deepcopy(trace))
+        extra = ""
+        if reps[mode].jit:
+            j = reps[mode].jit
+            extra = (f";expert_coalesced={j.expert_coalesced}"
+                     f";nondense_programs={j.nondense_programs}"
+                     f";mean_group={j.mean_group:.2f}"
+                     f";superkernels={j.superkernels}")
+        emit(f"moe_coalescing/{mode}/tenants=4",
+             reps[mode].modeled_time_s * 1e6,
+             f"tok_s={reps[mode].tokens_per_s:.0f}{extra}")
+    return reps
+
+
+def check(reps, *, expected_moe_steps: int) -> bool:
+    ok = True
+    jit = reps["vliw"].jit
+    if _tokens(reps["vliw"]) != _tokens(reps["batched"]):
+        print("FAIL: vliw greedy tokens diverged from batched mode",
+              file=sys.stderr)
+        ok = False
+    if jit.expert_coalesced < 1:
+        print("FAIL: zero superkernel groups coalesced an MoE expert GEMM "
+              "with another tenant's op", file=sys.stderr)
+        ok = False
+    if jit.nondense_programs < expected_moe_steps:
+        print(f"FAIL: only {jit.nondense_programs} non-dense steps went "
+              f"through the JIT (expected >= {expected_moe_steps}) — the "
+              "batched-fallback path is back", file=sys.stderr)
+        ok = False
+    write_summary("moe_coalescing", {
+        "ok": ok,
+        "expert_coalesced": jit.expert_coalesced,
+        "nondense_programs": jit.nondense_programs,
+        "mean_group": jit.mean_group,
+        "superkernels": jit.superkernels,
+        "modeled_time_us_vliw": reps["vliw"].modeled_time_s * 1e6,
+        "modeled_time_us_batched": reps["batched"].modeled_time_s * 1e6,
+        "tokens_identical":
+            _tokens(reps["vliw"]) == _tokens(reps["batched"]),
+    })
+    return ok
+
+
+def run() -> None:
+    """Entry point for the benchmarks/run.py harness."""
+    max_new, n_per = 3, 1
+    reps = bench(max_new_tokens=max_new, n_per_tenant=n_per)
+    # 2 MoE tenants x (max_new - 1) decode steps each
+    assert check(reps, expected_moe_steps=2 * (max_new - 1)), \
+        "moe coalescing acceptance failed"
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="small configuration for the CI smoke run")
+    args = ap.parse_args()
+    max_new = 3 if args.quick else 4
+    n_per = 1 if args.quick else 2
+    header()
+    reps = bench(max_new_tokens=max_new, n_per_tenant=n_per)
+    return 0 if check(reps, expected_moe_steps=2 * (max_new - 1)) else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

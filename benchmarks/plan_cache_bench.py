@@ -23,9 +23,9 @@ import jax
 import jax.numpy as jnp
 
 try:                                     # via the run.py harness
-    from benchmarks.common import emit, header
+    from benchmarks.common import emit, header, write_summary
 except ImportError:                      # standalone: python benchmarks/...
-    from common import emit, header
+    from common import emit, header, write_summary
 
 from repro.configs import smoke_config
 from repro.core.jit import (build_dense_decode_program,
@@ -114,6 +114,11 @@ def main() -> int:
         print(f"FAIL: cached program build is not faster than rebuild "
               f"(speedup={speedup:.2f}x)", file=sys.stderr)
         ok = False
+    write_summary("plan_cache", {
+        "ok": ok, "tenants": n_tenants, "steps": steps,
+        "hit_rate": stats.hit_rate, "hits": stats.hits,
+        "misses": stats.misses, "build_speedup": speedup,
+    })
     return 0 if ok else 1
 
 

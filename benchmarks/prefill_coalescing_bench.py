@@ -26,9 +26,9 @@ import jax
 import jax.numpy as jnp
 
 try:                                     # via the run.py harness
-    from benchmarks.common import emit, header
+    from benchmarks.common import emit, header, write_summary
 except ImportError:                      # standalone: python benchmarks/...
-    from common import emit, header
+    from common import emit, header, write_summary
 
 from repro.configs import smoke_config
 from repro.models import Model
@@ -105,6 +105,13 @@ def check(reps, speedup_batched, speedup_serial) -> bool:
         print(f"FAIL: vliw does not beat the batched baseline "
               f"({speedup_batched:.3f}x)", file=sys.stderr)
         ok = False
+    write_summary("prefill_coalescing", {
+        "ok": ok,
+        "prefill_coalesced": reps["vliw"].jit.prefill_coalesced,
+        "speedup_vs_batched": speedup_batched,
+        "speedup_vs_serialized_prefill": speedup_serial,
+        "tokens_identical": _tokens(reps["vliw"]) == _tokens(reps["batched"]),
+    })
     return ok
 
 

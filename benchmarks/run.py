@@ -14,7 +14,8 @@ from benchmarks.common import header
 from benchmarks import (dispatch_bench, e2e_slo_attainment,
                         fig3_batch_utilization,
                         fig4_time_multiplexing, fig5_spatial_variance,
-                        fig6_coalescing, fig7_clustering, plan_cache_bench,
+                        fig6_coalescing, fig7_clustering,
+                        moe_coalescing_bench, plan_cache_bench,
                         prefill_coalescing_bench, rnn_gemv_coalescing,
                         roofline_report, table1_autotuning)
 
@@ -31,6 +32,7 @@ MODULES = [
     ("plan_cache", plan_cache_bench),
     ("prefill_coalescing", prefill_coalescing_bench),
     ("dispatch", dispatch_bench),
+    ("moe_coalescing", moe_coalescing_bench),
 ]
 
 

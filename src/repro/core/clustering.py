@@ -87,6 +87,45 @@ def cluster_greedy(shapes: Sequence[GemmShape], max_waste: float = 0.25
     return clusters
 
 
+# ---------------------------------------------------------------------------
+# weight-key tagging — the operand-identity layer of the coalescing space
+# ---------------------------------------------------------------------------
+# Coalescing ELIGIBILITY is (n, k, dtype) only, but two finer identities ride
+# on the ops and matter to the dispatch layer:
+#   * the weight KEY (op.payload[2], attached by JitSession._push_op): ops
+#     sharing one key literally serve the same weight array, so the whole
+#     group collapses to a single weight load (the shared-operand regime);
+#   * the EXPERT tag prefix: MoE tenants emit each expert FFN GEMM as its
+#     own stage tagged "expert_*" with the expert index in the weight key,
+#     so the same expert's GEMMs coalesce across tenants (and with dense
+#     FFN GEMMs sharing their (n, k)) — the scenario-diversity win counted
+#     by JitStats.expert_coalesced.
+
+EXPERT_TAG_PREFIX = "expert_"
+
+
+def op_weight_key(op: KernelOp):
+    """The op's operand-identity key, or None for raw (payload-free) ops."""
+    return op.payload[2] if op.payload is not None else None
+
+
+def shared_weight_key(ops: Sequence[KernelOp]):
+    """The single weight key every op of the group carries — the condition
+    for the shared-operand dispatch regime (one weight load serves the
+    whole group) — or None (incl. singleton groups and raw op streams)."""
+    if len(ops) < 2:
+        return None
+    key = op_weight_key(ops[0])
+    if key is None:
+        return None
+    return key if all(op_weight_key(op) == key for op in ops[1:]) else None
+
+
+def is_expert_op(op: KernelOp) -> bool:
+    """True for a per-expert MoE FFN GEMM (tag "expert_gate/up/down")."""
+    return op.tag.startswith(EXPERT_TAG_PREFIX)
+
+
 def group_ops_exact(ops: Sequence[KernelOp]) -> Dict[Tuple, List[KernelOp]]:
     """Bucket ready ops by zero-padding coalescing key (exact n, k, dtype).
 

@@ -16,6 +16,14 @@ into the tenant's slotted cache — so long prompts enter the live op pool
 and coalesce with decode (and other tenants' prefill) traffic instead of
 serializing the device (``JitStats.prefill_coalesced``).
 
+Non-dense tenants are first-class streams too: MoE decode steps compile
+with the router/dispatch as glue and 3·E per-expert FFN ``GemmStage``s
+(``build_moe_decode_template`` — same expert GEMMs coalesce across tenants,
+``JitStats.expert_coalesced``), and SSM (Mamba-2/SSD) decode steps compile
+with the in/out projections declared and the selective-scan recurrence as
+glue (``build_ssm_decode_template``) — the paper's heterogeneous-tenant
+multiplexing scenario, not just same-family dense fleets.
+
 The runtime is a **virtual-time event loop**, not a round barrier. A
 ``JitSession`` keeps the scheduler, the live op pool and the stats open
 across calls so that:
@@ -66,6 +74,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.core.clustering import is_expert_op, shared_weight_key
 from repro.core.coalescer import Coalescer
 from repro.core.costmodel import CostModel, GemmShape, TPUV5E
 from repro.core.dispatch import DispatchStats, SuperkernelExecutor
@@ -268,7 +277,7 @@ def dense_program_cache_key(model, params, batch: int, cache) -> Tuple:
 # ---------------------------------------------------------------------------
 
 def _emit_dense_body(cfg: ModelConfig, params, stages: List[Stage], *,
-                     m_rows: int, attend_for) -> None:
+                     m_rows: int, attend_for, ffn_for=None) -> None:
     """Emit the per-layer stage scaffolding shared by the dense DECODE and
     PREFILL builders: pre-norm, the wq/wk/wv projections, the phase-specific
     attention glue (``attend_for(l, lp, is_global)``), wo, post-norm and the
@@ -278,7 +287,14 @@ def _emit_dense_body(cfg: ModelConfig, params, stages: List[Stage], *,
     the scaffolding must never drift between them.
 
     ``m_rows`` is the activation-row count of every GEMM stage — the slotted
-    batch for decode, the padded prompt length for prefill."""
+    batch for decode, the padded prompt length for prefill.
+
+    ``ffn_for(l, lp, stages)``, when given, replaces the dense gated-FFN
+    emission for layer ``l`` (the MoE builder supplies the router glue +
+    per-expert GemmStages); it consumes ``env['h2']`` (set by the post-attn
+    glue) and must leave ``env['x']`` updated with the FFN residual. The
+    attention scaffolding — weight keys and tags included — stays the
+    shared copy, so MoE attention GEMMs coalesce with dense tenants'."""
     hd = cfg.resolved_head_dim
     blocks = params["blocks"]
     # weight identity includes the params object: two tenants of the same
@@ -321,6 +337,9 @@ def _emit_dense_body(cfg: ModelConfig, params, stages: List[Stage], *,
             env["h2"] = rmsnorm(env["x"], lp["ln2"], cfg.norm_eps)
 
         glue(post_attn)
+        if ffn_for is not None:
+            ffn_for(l, lp, stages)
+            continue
         gemm("ffn_gate", (cfg.name, pid, l, "w_gate"),
              lambda lp=lp: lp["mlp"]["w_gate"],
              lambda env: env["h2"],
@@ -378,6 +397,30 @@ def _tied_unembed(params) -> jax.Array:
     return wT
 
 
+def _emit_decode_embed(cfg: ModelConfig, params, stages: List[Stage]) -> None:
+    """Token-embedding prologue shared by every DECODE builder (dense/MoE
+    via the GQA scaffold, SSM): scaled embed of the step's [B, 1] tokens
+    squeezed to [B, d], plus the cache-position snapshot."""
+
+    def embed(env):
+        x = params["embed"][env["tokens"]]
+        env["x"] = (x * jnp.asarray(jnp.sqrt(cfg.d_model), x.dtype))[:, 0]
+        env["pos"] = env["cache"]["pos"]
+
+    stages.append(GlueStage(embed))
+
+
+def _emit_final_logits(cfg: ModelConfig, params, stages: List[Stage], *,
+                       m_rows: int) -> None:
+    """Final-norm + unembed tail shared by every decode builder."""
+
+    def final_norm(env):
+        env["hf"] = rmsnorm(env["x"], params["final_norm"], cfg.norm_eps)
+
+    stages.append(GlueStage(final_norm))
+    _emit_unembed(cfg, params, stages, m_rows=m_rows)
+
+
 def _emit_unembed(cfg: ModelConfig, params, stages: List[Stage], *,
                   m_rows: int) -> None:
     """Emit the unembedding GEMM over ``env['hf']`` into ``env['logits']``
@@ -398,29 +441,11 @@ def _emit_unembed(cfg: ModelConfig, params, stages: List[Stage], *,
         shape=GemmShape(m=m_rows, n=n, k=cfg.d_model)))
 
 
-def build_dense_decode_template(model, params, batch: int) -> ProgramTemplate:
-    """Compile the decode step of a dense GQA model into a ProgramTemplate.
-
-    Equivalent to ``Model.decode_step`` but with every projection GEMM
-    declared to the JIT. Supported: arch_type 'dense' (and the text path of
-    'vlm'). Per-step inputs (tokens [B, 1], KV cache) are read from the
-    bound program's env, so one template serves every steady-state step.
-    """
-    cfg: ModelConfig = model.cfg
-    assert cfg.arch_type in ("dense", "vlm"), cfg.arch_type
+def _decode_attend_for(cfg: ModelConfig, B: int):
+    """Single-token slotted-cache attention glue factory, shared by the
+    dense and MoE decode builders (MoE layers keep standard GQA attention,
+    so both families must stay byte-identical here)."""
     hd = cfg.resolved_head_dim
-    B = batch
-    stages: List[Stage] = []
-
-    def glue(fn):
-        stages.append(GlueStage(fn))
-
-    def embed(env):
-        x = params["embed"][env["tokens"]]
-        env["x"] = (x * jnp.asarray(jnp.sqrt(cfg.d_model), x.dtype))[:, 0]
-        env["pos"] = env["cache"]["pos"]
-
-    glue(embed)
 
     def attend_for(l, lp, is_global):
         # one new token per row against the slotted cache, per-row positions
@@ -461,13 +486,26 @@ def build_dense_decode_template(model, params, batch: int) -> ProgramTemplate:
 
         return attend
 
-    _emit_dense_body(cfg, params, stages, m_rows=B, attend_for=attend_for)
+    return attend_for
 
-    def final_norm(env):
-        env["hf"] = rmsnorm(env["x"], params["final_norm"], cfg.norm_eps)
 
-    glue(final_norm)
-    _emit_unembed(cfg, params, stages, m_rows=B)
+def _build_gqa_decode_template(model, params, batch: int, *,
+                               ffn_for=None) -> ProgramTemplate:
+    """Shared decode-template scaffold for every GQA-attention family:
+    embed glue, the per-layer attention + FFN body (``ffn_for`` swaps the
+    dense gated FFN for a family-specific emitter — MoE), final norm,
+    unembed and the KV-cache write-back epilogue."""
+    cfg: ModelConfig = model.cfg
+    B = batch
+    stages: List[Stage] = []
+
+    def glue(fn):
+        stages.append(GlueStage(fn))
+
+    _emit_decode_embed(cfg, params, stages)
+    _emit_dense_body(cfg, params, stages, m_rows=B,
+                     attend_for=_decode_attend_for(cfg, B), ffn_for=ffn_for)
+    _emit_final_logits(cfg, params, stages, m_rows=B)
 
     def finish(env):
         cache = env["cache"]
@@ -476,6 +514,217 @@ def build_dense_decode_template(model, params, batch: int) -> ProgramTemplate:
             "layers": {
                 "k": jnp.stack(env["new_layers"]["k"]),
                 "v": jnp.stack(env["new_layers"]["v"]),
+            },
+        }
+
+    glue(finish)
+    return ProgramTemplate(stages=stages, batch=B, model_name=cfg.name)
+
+
+def build_dense_decode_template(model, params, batch: int) -> ProgramTemplate:
+    """Compile the decode step of a dense GQA model into a ProgramTemplate.
+
+    Equivalent to ``Model.decode_step`` but with every projection GEMM
+    declared to the JIT. Supported: arch_type 'dense' (and the text path of
+    'vlm'). Per-step inputs (tokens [B, 1], KV cache) are read from the
+    bound program's env, so one template serves every steady-state step.
+    """
+    assert model.cfg.arch_type in ("dense", "vlm"), model.cfg.arch_type
+    return _build_gqa_decode_template(model, params, batch)
+
+
+# ---------------------------------------------------------------------------
+# non-dense decode programs: MoE and SSM tenants as first-class streams
+# ---------------------------------------------------------------------------
+
+def moe_program_cache_key(model, params, batch: int, cache) -> Tuple:
+    """Plan-cache key for an MoE decode template. Same discipline as
+    ``dense_program_cache_key`` (params identity lives in the lookup-site
+    guard, not the key); the expert capacity C is a pure function of
+    (batch, cfg.moe), both captured here via batch + model identity."""
+    kc = cache["layers"]["k"]
+    return ("moe-decode", model.cfg.name, id(model), batch,
+            str(params["embed"].dtype), str(kc.dtype), tuple(kc.shape))
+
+
+def build_moe_decode_template(model, params, batch: int) -> ProgramTemplate:
+    """Compile the decode step of an MoE model into a ProgramTemplate.
+
+    Equivalent to ``Model.decode_step`` for arch_type 'moe': the attention
+    scaffolding is the SAME emission as the dense builder (so MoE attention
+    GEMMs coalesce with dense tenants'), while each layer's FFN becomes
+
+      * a glue stage running the router + sort-based capacity dispatch
+        (``moe_lib.route`` / ``dispatch_tokens`` — literally the code
+        ``moe_ffn`` runs, so capacity/drop semantics cannot drift), then
+      * 3·E declared per-expert ``GemmStage``s (gate/up/down over the
+        [C, d] expert buffer) tagged ``expert_*`` with the expert index in
+        the weight key — so the same expert's GEMMs share operands across
+        tenants serving the same params, and coalesce with any tenant's
+        GEMMs sharing their (n, k) (a dense FFN with the same d_ff does),
+      * a combine glue scattering the weighted expert outputs back.
+
+    Expert weight slices are materialized ONCE here at build time
+    (``moe_lib.expert_ffn_weights``) and closed over, giving the dispatch
+    executor's packed-weight cache stable array identities — a fresh slice
+    per step would read as a phantom hot-swap and repack every tick.
+
+    Within one program the expert GEMMs execute in program order (one live
+    op per stream); the cross-tenant coalescing is the point
+    (``JitStats.expert_coalesced``).
+    """
+    cfg: ModelConfig = model.cfg
+    assert cfg.arch_type == "moe" and cfg.has_moe, cfg.arch_type
+    from repro.models import moe as moe_lib
+    mcfg = cfg.moe
+    B, d = batch, cfg.d_model
+    E, top_k = mcfg.num_experts, mcfg.top_k
+    # decode routes the step's B tokens as one group (moe_ffn's G=1 path)
+    C = moe_lib.capacity(B, mcfg)
+    pid = id(params)
+
+    def ffn_for(l, lp, stages):
+        moe_p = lp["moe"]
+        sliced = [moe_lib.expert_ffn_weights(moe_p, e) for e in range(E)]
+
+        def glue(fn):
+            stages.append(GlueStage(fn))
+
+        def route_dispatch(env, moe_p=moe_p):
+            h2 = env["h2"]
+            weights, experts, _aux = moe_lib.route(moe_p["router"], h2, mcfg)
+            xg = h2.reshape(1, B, d)
+            wgt = weights.reshape(1, B, top_k)
+            eg = experts.reshape(1, B, top_k)
+            buf, meta = jax.vmap(
+                lambda xx, ww, ee: moe_lib.dispatch_tokens(
+                    xx, ww, ee, E, top_k, C))(xg, wgt, eg)
+            env["moe_buf"], env["moe_meta"] = buf, meta
+            env["moe_w"] = wgt
+            env["moe_down"] = [None] * E
+
+        glue(route_dispatch)
+        for e in range(E):
+            wg, wu, wd = sliced[e]
+            stages.append(GemmStage(
+                "expert_gate", (cfg.name, pid, l, "w_gate", e),
+                lambda w=wg: w,
+                lambda env, e=e: env["moe_buf"][0, e],
+                lambda env, out, e=e: env.__setitem__(("moe_gate", e), out),
+                shape=GemmShape(m=C, n=cfg.d_ff, k=d)))
+            stages.append(GemmStage(
+                "expert_up", (cfg.name, pid, l, "w_up", e),
+                lambda w=wu: w,
+                lambda env, e=e: env["moe_buf"][0, e],
+                lambda env, out, e=e: env.__setitem__(("moe_up", e), out),
+                shape=GemmShape(m=C, n=cfg.d_ff, k=d)))
+
+            def act(env, e=e):
+                env[("moe_act", e)] = jax.nn.silu(env.pop(("moe_gate", e))) \
+                    * env.pop(("moe_up", e))
+
+            glue(act)
+            stages.append(GemmStage(
+                "expert_down", (cfg.name, pid, l, "w_down", e),
+                lambda w=wd: w,
+                lambda env, e=e: env[("moe_act", e)],
+                lambda env, out, e=e: env["moe_down"].__setitem__(e, out),
+                shape=GemmShape(m=C, n=d, k=cfg.d_ff)))
+
+        def combine(env):
+            out_buf = jnp.stack(env.pop("moe_down"), axis=0)[None]
+            y = jax.vmap(
+                lambda ob, ww, mm: moe_lib.combine_tokens(
+                    ob, ww.reshape(-1), mm, B, d))(
+                out_buf, env.pop("moe_w"), env.pop("moe_meta"))
+            env.pop("moe_buf")
+            env["x"] = env["x"] + y.reshape(B, d).astype(env["h2"].dtype)
+
+        glue(combine)
+
+    return _build_gqa_decode_template(model, params, batch, ffn_for=ffn_for)
+
+
+def ssm_program_cache_key(model, params, batch: int, cache) -> Tuple:
+    """Plan-cache key for an SSM decode template: (model identity, batch,
+    dtype, recurrent-cache geometry). Guard discipline as for dense."""
+    cc = cache["layers"]["conv"]
+    return ("ssm-decode", model.cfg.name, id(model), batch,
+            str(params["embed"].dtype), str(cc.dtype), tuple(cc.shape),
+            tuple(cache["layers"]["h"].shape))
+
+
+def build_ssm_decode_template(model, params, batch: int) -> ProgramTemplate:
+    """Compile the decode step of an attention-free SSM (Mamba-2/SSD) model
+    into a ProgramTemplate. Equivalent to ``Model.decode_step`` for
+    arch_type 'ssm': per layer, the in projection ([B, d] → z/xBC/dt) and
+    the out projection are declared ``GemmStage``s — coalescible across
+    tenants — while the selective-scan recurrence between them runs as glue
+    via ``ssm_lib.decode_core`` (the SAME function ``ssd_decode_step``
+    calls, so the recurrence math has exactly one copy). The epilogue
+    stacks the per-layer conv windows + SSD states back into the tenant's
+    recurrent cache.
+    """
+    cfg: ModelConfig = model.cfg
+    assert cfg.arch_type == "ssm" and cfg.has_ssm, cfg.arch_type
+    from repro.models import ssm as ssm_lib
+    scfg = cfg.ssm
+    B, d = batch, cfg.d_model
+    d_inner = scfg.expand * d
+    n_in = 2 * d_inner + 2 * scfg.d_state + scfg.num_heads(d)
+    blocks = params["blocks"]
+    pid = id(params)
+    stages: List[Stage] = []
+
+    def glue(fn):
+        stages.append(GlueStage(fn))
+
+    _emit_decode_embed(cfg, params, stages)
+
+    def reset_layers(env):
+        env["new_layers"] = {"conv": [], "h": []}
+
+    glue(reset_layers)
+    for l in range(cfg.num_layers):
+        lp = jax.tree_util.tree_map(lambda a, l=l: a[l], blocks)
+
+        def pre(env, lp=lp):
+            env["h"] = rmsnorm(env["x"], lp["ln1"], cfg.norm_eps)
+
+        glue(pre)
+        stages.append(GemmStage(
+            "ssm_in_proj", (cfg.name, pid, l, "in_proj"),
+            lambda lp=lp: lp["mamba"]["in_proj"],
+            lambda env: env["h"],
+            lambda env, out: env.__setitem__("zxbcdt", out),
+            shape=GemmShape(m=B, n=n_in, k=d)))
+
+        def scan(env, lp=lp, l=l):
+            layers = env["cache"]["layers"]
+            y, new_c = ssm_lib.decode_core(
+                lp["mamba"], env.pop("zxbcdt"),
+                {"conv": layers["conv"][l], "h": layers["h"][l]}, scfg, d)
+            env["new_layers"]["conv"].append(new_c["conv"])
+            env["new_layers"]["h"].append(new_c["h"])
+            env["ssm_y"] = y
+
+        glue(scan)
+        stages.append(GemmStage(
+            "ssm_out_proj", (cfg.name, pid, l, "out_proj"),
+            lambda lp=lp: lp["mamba"]["out_proj"],
+            lambda env: env["ssm_y"],
+            lambda env, out: env.__setitem__("x", env["x"] + out),
+            shape=GemmShape(m=B, n=d, k=d_inner)))
+
+    _emit_final_logits(cfg, params, stages, m_rows=B)
+
+    def finish(env):
+        cache = env["cache"]
+        env["cache"] = {
+            "pos": cache["pos"] + 1,
+            "layers": {
+                "conv": jnp.stack(env["new_layers"]["conv"]),
+                "h": jnp.stack(env["new_layers"]["h"]),
             },
         }
 
@@ -703,6 +952,15 @@ class JitStats:
     # to prompt GEMMs (serving acceptance: must be > 0 on long-prompt
     # multi-tenant traces)
     prefill_coalesced: int = 0
+    # non-dense (MoE / SSM) tenant steps compiled+bound as KernelPrograms
+    # instead of taking the monolithic batched fallback — the serving
+    # engine counts one per decode program it admits for such a tenant
+    nondense_programs: int = 0
+    # dispatched superkernel groups that packed an MoE per-expert FFN GEMM
+    # (tag "expert_*", clustering.is_expert_op) together with at least one
+    # other stream's op — the heterogeneous-tenant spatial-sharing win the
+    # MoE coalescing benchmark gates on
+    expert_coalesced: int = 0
     # plan-cache deltas accrued during this run (core/plancache.py):
     # program templates (ServingEngine._build_program / VLIWJit.plan_cache)
     # and superkernel block plans (Coalescer memo). PlanCacheStats supports
@@ -842,8 +1100,9 @@ class JitSession:
             return TickEvent("wait", decision.wait_until, completed=completed)
         assert decision.kind == "dispatch" and decision.plan
         plan = decision.plan
-        wkeys = {op.payload[2] for op in plan.ops}
-        shared = len(wkeys) == 1 and len(plan.ops) > 1
+        # operand identity lives with the clustering layer: a group whose
+        # ops all carry ONE weight key loads the weights once
+        shared = shared_weight_key(plan.ops) is not None
         # the jitted dispatch fast path (core/dispatch.py): persistent
         # packed weights + bucketed envelopes + compiled pack/kernel/unpack
         outs = self.jit.executor.execute(plan.ops, shared_operand=shared)
@@ -853,9 +1112,11 @@ class JitSession:
         stats.groups.add(len(plan.ops))
         stats.padding_waste.add(plan.padding_waste)
         stats.shared_dispatches += int(shared)
-        if len({op.stream_id for op in plan.ops}) > 1 \
-                and any(op.op_kind == "prefill" for op in plan.ops):
-            stats.prefill_coalesced += 1
+        if len({op.stream_id for op in plan.ops}) > 1:
+            if any(op.op_kind == "prefill" for op in plan.ops):
+                stats.prefill_coalesced += 1
+            if any(is_expert_op(op) for op in plan.ops):
+                stats.expert_coalesced += 1
         t = self.jit.cost.coalesced_time([o.shape for o in plan.ops],
                                          plan.block, shared_operand=shared)
         stats.modeled_time_s += t

@@ -37,6 +37,12 @@ Invalidation semantics (the cache must never serve a stale plan):
     invalidations). ``capacity=0`` disables storage entirely: every
     lookup is a miss and nothing is retained (the "uncached" baseline in
     tests and benchmarks).
+  * **LRU byte budget** — with ``byte_capacity`` set, entries also evict
+    LRU-first while ``sum(value.nbytes)`` exceeds the budget (values
+    without ``nbytes`` count 0, so only array-valued caches — e.g. the
+    dispatch executor's packed weights, incl. MoE stacked expert packs —
+    are byte-constrained). A value bigger than the whole budget is passed
+    through uncached rather than wiping every resident entry.
 
 This module is dependency-free (stdlib only) so every layer of the stack —
 coalescer, JIT, serving engine — can import it without cycles.
@@ -197,6 +203,15 @@ class PlanCache:
         value = build()
         if self.capacity > 0:
             entry = _Entry(value, guard)
+            if self.byte_capacity is not None \
+                    and self._nbytes(entry) > self.byte_capacity:
+                # an entry bigger than the WHOLE byte budget can never be
+                # retained legally — storing it used to wipe every other
+                # entry (each dropped for nothing, since the cache stayed
+                # over budget anyway with the giant pinned as "newest").
+                # Large MoE expert packs hit this: pass the value through
+                # uncached instead, leaving unrelated entries intact.
+                return value, False
             self._entries[key] = entry
             self._entries.move_to_end(key)
             self.bytes += self._nbytes(entry)

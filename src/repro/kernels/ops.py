@@ -39,6 +39,15 @@ back — so any bucket ≥ the exact envelope is correct. Note that bucketing
 K beyond the eager path's exact 128-multiple envelope changes the fp32
 contraction split (last-ulp reassociation); see the correctness contract
 in core/dispatch.py.
+
+The same zero-problem padding is what makes RAGGED groups safe — including
+MoE expert-GEMM groups, whose per-problem row counts (the per-expert token
+buffers, m = capacity C) vary with each tenant's batch and routing: every
+problem's rows pad independently to ``bm`` multiples, the G bucket pads
+with whole zero problems (outputs dropped), and a group mixing a tall
+prefill GEMM, a 4-row decode GEMV and a C-row expert buffer shares one
+traced signature per bucketed envelope. No kernel changes were needed for
+non-dense tenants; only this padding contract.
 """
 from __future__ import annotations
 

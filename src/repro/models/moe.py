@@ -92,6 +92,29 @@ def _combine(out_buf: jax.Array, w_flat: jax.Array, meta, T: int, d: int
     return jnp.zeros((T, d), jnp.float32).at[sorted_tok].add(contrib)
 
 
+# Public per-stage seams for the JIT's MoE decode template (core/jit.py
+# ``build_moe_decode_template``): the sort-based dispatch and the weighted
+# combine are exposed under stable names so the staged path runs EXACTLY the
+# same bookkeeping code as the monolithic ``moe_ffn`` (one copy of the
+# capacity/drop semantics), with only the three expert einsums replaced by
+# declared per-expert GemmStages.
+dispatch_tokens = _dispatch
+combine_tokens = _combine
+
+
+def expert_ffn_weights(moe_params: Params, e: int
+                       ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Expert ``e``'s (w_gate, w_up, w_down) slices of the stacked packs.
+
+    Per-stage weight accessor for the JIT template builder. Callers that
+    feed the dispatch executor must call this ONCE (at template build) and
+    close over the results: the executor's packed-weight cache guards on
+    weight-array identity, so a fresh slice per step would read as a
+    phantom hot-swap and repack the expert stack every tick."""
+    return (moe_params["w_gate"][e], moe_params["w_up"][e],
+            moe_params["w_down"][e])
+
+
 def moe_ffn(params: Params, x: jax.Array, cfg: MoEConfig,
             groups: Optional[int] = None) -> Tuple[jax.Array, jax.Array]:
     """MoE FFN. x: [T, d] -> (y [T, d], aux_loss scalar).

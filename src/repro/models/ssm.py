@@ -47,12 +47,19 @@ def init_mamba(key, d_model: int, cfg: SSMConfig, dtype) -> Params:
     }
 
 
+def _split_zxbcdt(zxbcdt: jax.Array, d_inner: int, N: int):
+    """THE in_proj packing layout: [z (d_inner) | xBC (d_inner + 2N) |
+    dt (H)]. Single source of truth — both the full-sequence path
+    (``_split_in_proj``) and the decode path (``decode_core``, which the
+    JIT's SSM template feeds from a declared GEMM) split through here."""
+    return jnp.split(zxbcdt, [d_inner, 2 * d_inner + 2 * N], axis=-1)
+
+
 def _split_in_proj(params: Params, u: jax.Array, cfg: SSMConfig, d_model: int):
     d_inner = cfg.expand * d_model
     H = cfg.num_heads(d_model)
     N = cfg.d_state
-    zxbcdt = u @ params["in_proj"]
-    z, xBC, dt = jnp.split(zxbcdt, [d_inner, 2 * d_inner + 2 * N], axis=-1)
+    z, xBC, dt = _split_zxbcdt(u @ params["in_proj"], d_inner, N)
     return z, xBC, dt, d_inner, H, N
 
 
@@ -179,11 +186,25 @@ def init_ssm_cache(batch: int, d_model: int, cfg: SSMConfig, dtype
     }
 
 
-def ssd_decode_step(params: Params, u: jax.Array, cache: Dict[str, jax.Array],
-                    cfg: SSMConfig) -> Tuple[jax.Array, Dict[str, jax.Array]]:
-    """One-token recurrent update. u: [B, 1, d_model]."""
-    Bsz, _, d_model = u.shape
-    z, xBC, dt, d_inner, H, N = _split_in_proj(params, u[:, 0], cfg, d_model)
+def decode_core(params: Params, zxbcdt: jax.Array,
+                cache: Dict[str, jax.Array], cfg: SSMConfig, d_model: int
+                ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Everything between the two decode-step projections.
+
+    Takes the in-projection output ``zxbcdt`` [B, 2·d_inner + 2N + H] and
+    the per-layer recurrent cache; returns the gated/normed ``y``
+    [B, d_inner] *ready for the out projection* plus the updated cache.
+    This is the per-stage seam the JIT's SSM decode template
+    (core/jit.py ``build_ssm_decode_template``) builds on: the in/out
+    projections become declared ``GemmStage``s (coalescible across
+    tenants) while this selective-scan recurrence runs as glue — keeping
+    exactly ONE copy of the recurrence math shared with
+    ``ssd_decode_step``."""
+    Bsz = zxbcdt.shape[0]
+    d_inner = cfg.expand * d_model
+    H = cfg.num_heads(d_model)
+    N = cfg.d_state
+    z, xBC, dt = _split_zxbcdt(zxbcdt, d_inner, N)
     P = cfg.head_dim
 
     # causal conv over the cached window + the new input
@@ -207,9 +228,18 @@ def ssd_decode_step(params: Params, u: jax.Array, cache: Dict[str, jax.Array],
     y = y.reshape(Bsz, d_inner)
 
     y = y * jax.nn.silu(z.astype(jnp.float32))
-    y = rmsnorm(y.astype(u.dtype), params["norm"])
+    y = rmsnorm(y.astype(zxbcdt.dtype), params["norm"])
+    return y, {"conv": new_conv, "h": h}
+
+
+def ssd_decode_step(params: Params, u: jax.Array, cache: Dict[str, jax.Array],
+                    cfg: SSMConfig) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """One-token recurrent update. u: [B, 1, d_model]."""
+    Bsz, _, d_model = u.shape
+    y, new_cache = decode_core(params, u[:, 0] @ params["in_proj"],
+                               cache, cfg, d_model)
     out = (y @ params["out_proj"])[:, None]
-    return out, {"conv": new_conv, "h": h}
+    return out, new_cache
 
 
 def ssd_reference(params: Params, u: jax.Array, cfg: SSMConfig) -> jax.Array:

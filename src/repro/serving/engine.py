@@ -7,8 +7,8 @@ Three execution modes, mirroring the paper's comparison end-to-end:
   * "batched" — continuous batching *within* each tenant, tenants serialized
                 (ModelBatch / TensorRT-style, §4.2's strongest baseline);
   * "vliw"    — OUR engine: a single virtual-time **event loop** over an
-                admission-open ``JitSession`` (core/jit.py). Dense tenants'
-                decode steps AND prompt prefills are compiled to
+                admission-open ``JitSession`` (core/jit.py). Tenants'
+                decode steps AND dense prompt prefills are compiled to
                 KernelPrograms and coalesced ACROSS tenants: admission
                 *declares* a prefill program (prompt GEMMs enter the live
                 op pool, KV write-back is the program epilogue, and the
@@ -22,8 +22,33 @@ Three execution modes, mirroring the paper's comparison end-to-end:
                 scheduler, so its stagger/WAIT branch executes for real; the
                 tightest per-request deadline of each tenant's batch flows
                 into per-op ``latest_start_t`` for EDF anchoring and
-                eviction of already-missed stragglers. Non-dense tenants
-                fall back to monolithic batched steps inside the same loop.
+                eviction of already-missed stragglers.
+
+Arch-support matrix (which path each tenant takes in vliw mode):
+
+  ==========  =====================  ==========================
+  arch_type   decode step            prompt prefill
+  ==========  =====================  ==========================
+  dense       KernelProgram          declared prefill program
+                                     (>= prefill_declare_min;
+                                     analytic below it)
+  vlm         KernelProgram          analytic (patch projector)
+  moe         KernelProgram          analytic
+              (router glue +
+              per-expert GEMMs)
+  ssm         KernelProgram          analytic
+              (scan recurrence glue)
+  hybrid      monolithic batched     analytic
+  audio       monolithic batched     analytic
+  int8-KV     monolithic batched     analytic
+  (any arch)
+  ==========  =====================  ==========================
+
+KernelProgram rows flow through admission → EDF scheduling → clustering →
+coalesced dispatch (``JitStats.nondense_programs`` counts the MoE/SSM
+ones); "monolithic batched" rows run ``Model.decode_step`` inside the same
+event loop, serialized on the virtual clock. Baseline modes ("time",
+"batched") always run monolithic steps — that asymmetry IS the experiment.
 
 The baseline modes keep their defining round-synchronous semantics
 (``_run_rounds``); greedy tokens are asserted identical across all three
@@ -56,8 +81,11 @@ from repro.core.costmodel import CostModel, GemmShape, TPUV5E
 from repro.core.jit import (JitStats, KernelProgram, VLIWJit,
                             build_dense_decode_template,
                             build_dense_prefill_template,
-                            dense_program_cache_key, prefill_bucket,
-                            prefill_program_cache_key)
+                            build_moe_decode_template,
+                            build_ssm_decode_template,
+                            dense_program_cache_key, moe_program_cache_key,
+                            prefill_bucket, prefill_program_cache_key,
+                            ssm_program_cache_key)
 from repro.core.kernelspec import gemm_population
 from repro.core.scheduler import SchedulerConfig
 from repro.models.model import Model
@@ -195,7 +223,8 @@ class ServingEngine:
                  plan_capacity: int = 128, declared_prefill: bool = True,
                  prefill_declare_min: int = 16,
                  predict_arrivals: bool = False,
-                 arrival_alpha: float = 0.2):
+                 arrival_alpha: float = 0.2,
+                 weight_budget_bytes: Optional[int] = 1 << 30):
         assert mode in ("time", "batched", "vliw")
         self.tenants = {t.name: t for t in tenants}
         self.mode = mode
@@ -223,9 +252,13 @@ class ServingEngine:
         self._arrival_pred = ArrivalPredictor(alpha=arrival_alpha)
         self.cost = cost or CostModel(TPUV5E)
         # plan_capacity bounds the JIT's persistent plan caches (program
-        # templates + block plans); 0 = rebuild per step (baseline)
+        # templates + block plans); 0 = rebuild per step (baseline).
+        # weight_budget_bytes bounds the dispatch executor's packed-weight
+        # cache in BYTES — entries are full padded operand copies, and the
+        # stacked per-expert packs of MoE tenants are the big ones
         self.jit = VLIWJit(self.cost, sched_cfg=sched_cfg,
-                           max_group=max_group, plan_capacity=plan_capacity)
+                           max_group=max_group, plan_capacity=plan_capacity,
+                           weight_budget_bytes=weight_budget_bytes)
         self.jit_stats = JitStats()
         for t in tenants:
             t.cache = t.model.init_cache(t.max_batch, t.cache_len)
@@ -383,9 +416,12 @@ class ServingEngine:
     # the event loop (vliw mode)
     # ------------------------------------------------------------------
     def _jit_capable(self, t: Tenant) -> bool:
-        # layerwise kernel programs support dense bf16/f32 caches;
-        # int8-KV tenants take the monolithic batched step
-        return t.cfg.arch_type in ("dense", "vlm") \
+        # layerwise kernel programs cover dense/vlm GQA decode, MoE decode
+        # (router glue + per-expert GemmStages) and SSM decode (selective-
+        # scan glue) over bf16/f32 caches; int8-KV tenants (and hybrid /
+        # encdec archs) take the monolithic batched step — see the
+        # arch-support matrix in the module docstring
+        return t.cfg.arch_type in ("dense", "vlm", "moe", "ssm") \
             and not getattr(t.model, "kv_quant", False)
 
     def _prefill_capable(self, t: Tenant) -> bool:
@@ -497,10 +533,21 @@ class ServingEngine:
         deadline = min(future) if future else \
             min(finals) if finals else math.inf
         batch = int(t.slot_tok.shape[0])
+        arch = t.cfg.arch_type
+        if arch == "moe":
+            key = moe_program_cache_key(t.model, t.params, batch, t.cache)
+            build = lambda: build_moe_decode_template(  # noqa: E731
+                t.model, t.params, batch)
+        elif arch == "ssm":
+            key = ssm_program_cache_key(t.model, t.params, batch, t.cache)
+            build = lambda: build_ssm_decode_template(  # noqa: E731
+                t.model, t.params, batch)
+        else:
+            key = dense_program_cache_key(t.model, t.params, batch, t.cache)
+            build = lambda: build_dense_decode_template(  # noqa: E731
+                t.model, t.params, batch)
         template = self.jit.plan_cache.get_or_build(
-            dense_program_cache_key(t.model, t.params, batch, t.cache),
-            lambda: build_dense_decode_template(t.model, t.params, batch),
-            guard=(t.model, t.params), group=("tenant", t.name))
+            key, build, guard=(t.model, t.params), group=("tenant", t.name))
         return template.bind(
             stream_id=stream_id, tokens=t.slot_tok, cache=t.cache,
             arrival_t=now, deadline_t=deadline,
@@ -575,6 +622,8 @@ class ServingEngine:
                 if self._jit_capable(t) and name not in inflight \
                         and t.active_slots():
                     prog = self._build_program(t, stream_ids[name], now)
+                    if t.cfg.arch_type in ("moe", "ssm"):
+                        session.stats.nondense_programs += 1
                     inflight[name] = prog
                     session.admit(prog)
                     progressed = True

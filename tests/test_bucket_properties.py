@@ -1,0 +1,137 @@
+"""Property-based bucket-math invariants (via tests/_hypothesis_compat.py —
+real hypothesis when installed, a deterministic example grid otherwise).
+
+The bucketing layer is what keeps the jitted dispatch's traced-shape space
+finite, and its correctness contract is simple enough to state as algebra:
+``envelope_bucket`` / ``prefill_bucket`` must be idempotent, monotone,
+power-of-two valued and never shrink their input — any violation either
+retraces forever (non-idempotent), mis-sorts shapes across buckets
+(non-monotone) or slices real rows/columns off a packed operand (shrink).
+The dispatch cache key must additionally be insensitive to the scheduler's
+urgency reordering of a group (canonical pack order)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from _hypothesis_compat import given, settings, st
+
+from repro.core.costmodel import GemmShape
+from repro.core.dispatch import SuperkernelExecutor, _pow2, _tile_bucket
+from repro.core.jit import prefill_bucket
+from repro.core.kernelspec import make_op
+from repro.core.plancache import PlanCache
+from repro.kernels.ops import envelope_bucket
+
+
+def _is_pow2(x: int) -> bool:
+    return x >= 1 and (x & (x - 1)) == 0
+
+
+# ---------------------------------------------------------------------------
+# envelope_bucket
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=60, deadline=None)
+@given(st.integers(min_value=1, max_value=1 << 16))
+def test_envelope_bucket_invariants(x):
+    b = envelope_bucket(x)
+    assert b >= x                      # never shrinks
+    assert b >= 128                    # MXU-tile floor
+    assert _is_pow2(b)                 # power-of-two output
+    assert envelope_bucket(b) == b     # idempotent
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.integers(min_value=1, max_value=1 << 15),
+       st.integers(min_value=0, max_value=1 << 14))
+def test_envelope_bucket_monotone(x, dx):
+    assert envelope_bucket(x) <= envelope_bucket(x + dx)
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.integers(min_value=1, max_value=1 << 12),
+       st.sampled_from([8, 16, 64, 128, 256]))
+def test_envelope_bucket_respects_minimum(x, minimum):
+    b = envelope_bucket(x, minimum=minimum)
+    assert b >= minimum and b >= x and _is_pow2(b)
+    assert envelope_bucket(b, minimum=minimum) == b
+
+
+# ---------------------------------------------------------------------------
+# prefill_bucket
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=60, deadline=None)
+@given(st.integers(min_value=1, max_value=1 << 14))
+def test_prefill_bucket_invariants(x):
+    b = prefill_bucket(x)
+    assert b >= x and b >= 8 and _is_pow2(b)
+    assert prefill_bucket(b) == b      # idempotent
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.integers(min_value=1, max_value=1 << 13),
+       st.integers(min_value=0, max_value=1 << 12))
+def test_prefill_bucket_monotone(x, dx):
+    assert prefill_bucket(x) <= prefill_bucket(x + dx)
+
+
+# ---------------------------------------------------------------------------
+# G / m-tile buckets (the dispatch-side power-of-two pads)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=60, deadline=None)
+@given(st.integers(min_value=1, max_value=1 << 12))
+def test_pow2_bucket_invariants(n):
+    p = _pow2(n)
+    assert p >= n and _is_pow2(p) and _pow2(p) == p
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.lists(st.integers(min_value=1, max_value=300), min_size=1,
+                max_size=8),
+       st.sampled_from([1, 2, 8, 16]))
+def test_tile_bucket_covers_rows(rows, bm):
+    tiles = _tile_bucket(rows, bm)
+    need = sum((m + bm - 1) // bm for m in rows)
+    assert tiles >= need               # the bucket always covers the rows
+    assert _is_pow2(tiles)
+
+
+# ---------------------------------------------------------------------------
+# canonical pack order: dispatch cache keys ignore scheduler reordering
+# ---------------------------------------------------------------------------
+
+def _rand(seed, shape):
+    return jax.random.normal(jax.random.PRNGKey(seed), shape, jnp.float32)
+
+
+@settings(max_examples=24, deadline=None)
+@given(st.integers(min_value=0, max_value=23))
+def test_dispatch_cache_key_pack_order_insensitive(perm_index):
+    """Any permutation of a group's ops — the scheduler reorders by urgency
+    tick to tick — must resolve to ONE packed-weight entry, with outputs
+    restored to call order."""
+    import itertools
+    problems = [(_rand(2 * i, (4, 128)), _rand(2 * i + 1, (128, 128)))
+                for i in range(4)]
+    perms = list(itertools.permutations(range(4)))
+    perm = perms[perm_index % len(perms)]
+
+    def ops_in(order):
+        out = []
+        for i in order:
+            a, w = problems[i]
+            op = make_op(i, "gemv", GemmShape(m=4, n=128, k=128),
+                         tag="ffn", seq_index=1)
+            op.payload = (a, w, ("w", i))
+            out.append(op)
+        return out
+
+    ex = SuperkernelExecutor(PlanCache(32), bm=8)
+    base = ex.execute(ops_in(range(4)))
+    permuted = ex.execute(ops_in(perm))
+    assert len(ex.weight_cache) == 1           # one canonical entry
+    assert ex.stats.weight_hits == 1           # the permutation HIT it
+    for pos, i in enumerate(perm):             # outputs follow CALL order
+        np.testing.assert_array_equal(np.asarray(permuted[pos]),
+                                      np.asarray(base[i]))

@@ -1,0 +1,359 @@
+"""Non-dense tenants through the JIT (ISSUE 5 tentpole): MoE and SSM decode
+steps compile to first-class KernelPrograms — template-vs-monolithic
+equivalence per batch size and expert count, steady-state plan-cache hit
+rates, weight hot-swap invalidation, cross-tenant expert-GEMM coalescing,
+the mixed dense+MoE+SSM+int8-KV fleet staying token-identical across all
+three serving modes, and the PlanCache byte-budget regressions for the
+bigger stacked expert packs this path introduces."""
+import copy
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import MoEConfig, smoke_config
+from repro.core.costmodel import GemmShape
+from repro.core.jit import (VLIWJit, build_moe_decode_template,
+                            build_ssm_decode_template, moe_program_cache_key,
+                            ssm_program_cache_key)
+from repro.core.kernelspec import make_op
+from repro.core.plancache import PlanCache
+from repro.core.dispatch import SuperkernelExecutor
+from repro.models import Model
+from repro.serving import ServeRequest, ServingEngine, Tenant
+
+
+def _moe_cfg(num_experts: int):
+    base = smoke_config("grok-1-314b")
+    return dataclasses.replace(
+        base, name=f"{base.name}-e{num_experts}",
+        moe=MoEConfig(num_experts=num_experts, top_k=2))
+
+
+def _setup(cfg, rng, B=2, S=12, CL=32):
+    m = Model(cfg, param_dtype=jnp.float32)
+    params = m.init(rng)
+    batch = {"tokens": jax.random.randint(rng, (B, S), 0, cfg.vocab_size)}
+    _, cache = m.prefill(params, batch, cache_len=CL)
+    tok = jax.random.randint(jax.random.fold_in(rng, 9), (B, 1), 0,
+                             cfg.vocab_size)
+    return m, params, cache, tok
+
+
+def _builder_for(cfg):
+    return build_moe_decode_template if cfg.arch_type == "moe" \
+        else build_ssm_decode_template
+
+
+def _tokens(rep):
+    return [r.tokens_out for r in sorted(rep.requests,
+                                         key=lambda r: r.req_id)]
+
+
+# ---------------------------------------------------------------------------
+# template == monolithic decode_step, per batch size and expert count
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("batch", [1, 2])
+@pytest.mark.parametrize("num_experts", [2, 4])
+def test_moe_template_matches_decode_step(batch, num_experts, rng):
+    cfg = _moe_cfg(num_experts)
+    m, params, cache, tok = _setup(cfg, rng, B=batch)
+    want, want_cache = m.decode_step(params, tok, cache)
+    template = build_moe_decode_template(m, params, batch)
+    prog = template.bind(stream_id=0, tokens=tok, cache=cache)
+    VLIWJit(max_group=8).run([prog])
+    np.testing.assert_allclose(prog.env["logits"][:, None, :], want,
+                               rtol=2e-4, atol=2e-4)
+    # greedy tokens bit-identical to the monolithic step
+    np.testing.assert_array_equal(
+        np.asarray(jnp.argmax(prog.env["logits"], axis=-1)),
+        np.asarray(jnp.argmax(want[:, -1], axis=-1)))
+    for key in ("k", "v"):
+        np.testing.assert_allclose(prog.env["cache"]["layers"][key],
+                                   want_cache["layers"][key],
+                                   rtol=2e-4, atol=2e-4)
+    assert int(prog.env["cache"]["pos"][0]) == int(want_cache["pos"][0])
+
+
+@pytest.mark.parametrize("batch", [1, 2])
+def test_ssm_template_matches_decode_step(batch, rng):
+    cfg = smoke_config("mamba2-2.7b")
+    m, params, cache, tok = _setup(cfg, rng, B=batch)
+    want, want_cache = m.decode_step(params, tok, cache)
+    template = build_ssm_decode_template(m, params, batch)
+    prog = template.bind(stream_id=0, tokens=tok, cache=cache)
+    VLIWJit(max_group=8).run([prog])
+    np.testing.assert_allclose(prog.env["logits"][:, None, :], want,
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_array_equal(
+        np.asarray(jnp.argmax(prog.env["logits"], axis=-1)),
+        np.asarray(jnp.argmax(want[:, -1], axis=-1)))
+    np.testing.assert_allclose(prog.env["cache"]["layers"]["conv"],
+                               want_cache["layers"]["conv"],
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(prog.env["cache"]["layers"]["h"],
+                               want_cache["layers"]["h"],
+                               rtol=2e-4, atol=2e-4)
+    assert int(prog.env["cache"]["pos"][0]) == int(want_cache["pos"][0])
+
+
+@pytest.mark.parametrize("arch", ["grok-1-314b", "mamba2-2.7b"])
+def test_template_bind_bit_identical_to_fresh_build(arch, rng):
+    """Binding a cached template must be BIT-identical to building a fresh
+    one — the plan cache can never change a single logit."""
+    cfg = smoke_config(arch)
+    m, params, cache, tok = _setup(cfg, rng)
+    build = _builder_for(cfg)
+    fresh = build(m, params, 2).bind(stream_id=0, tokens=tok, cache=cache)
+    VLIWJit(max_group=8).run([fresh])
+    template = build(m, params, 2)
+    bound = template.bind(stream_id=0, tokens=tok, cache=cache)
+    VLIWJit(max_group=8).run([bound])
+    np.testing.assert_array_equal(np.asarray(bound.env["logits"]),
+                                  np.asarray(fresh.env["logits"]))
+    # second step from the SAME template: rebind tokens + cache only
+    tok2 = jnp.argmax(bound.env["logits"], axis=-1).astype(jnp.int32)[:, None]
+    fresh2 = build(m, params, 2).bind(stream_id=0, tokens=tok2,
+                                      cache=fresh.env["cache"])
+    VLIWJit(max_group=8).run([fresh2])
+    bound2 = template.bind(stream_id=0, tokens=tok2,
+                           cache=bound.env["cache"])
+    VLIWJit(max_group=8).run([bound2])
+    np.testing.assert_array_equal(np.asarray(bound2.env["logits"]),
+                                  np.asarray(fresh2.env["logits"]))
+
+
+def test_nondense_cache_keys_capture_identity(rng):
+    cfg_moe, cfg_ssm = _moe_cfg(4), smoke_config("mamba2-2.7b")
+    mm = Model(cfg_moe, param_dtype=jnp.float32)
+    pm = mm.init(rng)
+    ms = Model(cfg_ssm, param_dtype=jnp.float32)
+    ps = ms.init(rng)
+    cm, cs = mm.init_cache(2, 32), ms.init_cache(2, 32)
+    assert moe_program_cache_key(mm, pm, 2, cm) \
+        == moe_program_cache_key(mm, pm, 2, mm.init_cache(2, 32))
+    assert moe_program_cache_key(mm, pm, 2, cm) \
+        != moe_program_cache_key(mm, pm, 4, mm.init_cache(4, 32))
+    assert ssm_program_cache_key(ms, ps, 2, cs) \
+        != ssm_program_cache_key(ms, ps, 4, ms.init_cache(4, 32))
+    # moe and ssm keys can never collide with each other or with dense
+    assert moe_program_cache_key(mm, pm, 2, cm)[0] == "moe-decode"
+    assert ssm_program_cache_key(ms, ps, 2, cs)[0] == "ssm-decode"
+
+
+# ---------------------------------------------------------------------------
+# serving: steady-state hit rate, hot-swap, cached-vs-uncached identity
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def fleet_models():
+    out = {}
+    for arch, seed in (("gemma3-1b", 1), ("grok-1-314b", 2),
+                       ("mamba2-2.7b", 3)):
+        cfg = smoke_config(arch)
+        m = Model(cfg, param_dtype=jnp.float32)
+        out[arch] = (m, m.init(jax.random.PRNGKey(seed)))
+    kvq = Model(smoke_config("gemma3-1b"), param_dtype=jnp.float32,
+                kv_quant=True)
+    out["int8-kv"] = (kvq, kvq.init(jax.random.PRNGKey(5)))
+    return out
+
+
+@pytest.mark.parametrize("arch", ["grok-1-314b", "mamba2-2.7b"])
+def test_nondense_steady_state_hit_rate_and_cached_identity(arch,
+                                                            fleet_models):
+    m, p = fleet_models[arch]
+    steps = 5   # decode steps per request (max_new_tokens - 1)
+    trace = [ServeRequest(0, "a", 0.0, 8, steps + 1, 1.0)]
+    reps = {}
+    for cap in (128, 0):     # cached vs rebuild-per-step baseline
+        eng = ServingEngine([Tenant("a", m, p, cache_len=32, max_batch=2)],
+                            mode="vliw", plan_capacity=cap)
+        reps[cap] = eng.run(copy.deepcopy(trace))
+    assert _tokens(reps[128]) == _tokens(reps[0])   # bit-identical tokens
+    pc = reps[128].jit.plan_cache
+    # miss only on the first step; every steady-state tick binds from cache
+    assert pc.misses == 1
+    assert pc.hits == steps - 1
+    assert pc.hit_rate >= (steps - 1) / steps - 1e-9
+    assert pc.invalidations == 0
+    assert reps[128].jit.nondense_programs == steps
+    # the expert/scan weight closures hand the executor STABLE arrays:
+    # steady state must never read as a phantom weight hot-swap
+    assert reps[128].jit.dispatch.weight_invalidations == 0
+    assert reps[128].jit.dispatch.weight_hits > 0
+
+
+def test_nondense_weight_hot_swap_invalidates(fleet_models):
+    m, p_old = fleet_models["grok-1-314b"]
+    p_new = Model(m.cfg, param_dtype=jnp.float32).init(jax.random.PRNGKey(77))
+    trace1 = [ServeRequest(0, "a", 0.0, 8, 3, 1.0)]
+    trace2 = [ServeRequest(1, "a", 0.0, 8, 3, 1.0)]
+    eng = ServingEngine([Tenant("a", m, p_old, cache_len=32, max_batch=2)],
+                        mode="vliw")
+    eng.run(copy.deepcopy(trace1))
+    assert eng.jit.plan_cache.stats.invalidations == 0
+    eng.tenants["a"].params = p_new          # weight hot-swap, same model
+    rep_swapped = eng.run(copy.deepcopy(trace2))
+    assert eng.jit.plan_cache.stats.invalidations >= 1
+    fresh = ServingEngine([Tenant("a", m, p_new, cache_len=32, max_batch=2)],
+                          mode="vliw")
+    rep_fresh = fresh.run(copy.deepcopy(trace2))
+    assert _tokens(rep_swapped) == _tokens(rep_fresh)
+
+
+def test_mixed_fleet_three_modes_token_identity(fleet_models):
+    """Acceptance core: a dense + MoE + SSM + int8-KV fleet generates
+    bit-identical per-tenant tokens in all three modes AND vs each tenant
+    running alone, with the MoE/SSM tenants dispatching through the JIT
+    (nondense_programs >= 1) instead of the batched fallback."""
+    names = {"dense": "gemma3-1b", "moe": "grok-1-314b",
+             "ssm": "mamba2-2.7b", "int8": "int8-kv"}
+
+    def tenants(only=None):
+        return [Tenant(n, *fleet_models[a], cache_len=32, max_batch=2)
+                for n, a in names.items() if only is None or n == only]
+
+    trace = [ServeRequest(i, n, i * 1e-6, 8, 3, 10.0)
+             for i, n in enumerate(names)]
+    toks = {}
+    for mode in ("time", "batched", "vliw"):
+        eng = ServingEngine(tenants(), mode=mode)
+        rep = eng.run(copy.deepcopy(trace))
+        toks[mode] = {r.tenant: r.tokens_out for r in rep.requests}
+        assert all(len(t) == 3 for t in toks[mode].values())
+        if mode == "vliw":
+            # MoE and SSM steps went through the JIT, not the fallback
+            assert rep.jit.nondense_programs >= 1
+            assert rep.jit.superkernels > 0
+    assert toks["time"] == toks["batched"] == toks["vliw"]
+    # per-tenant isolation: co-tenants cannot change anyone's tokens
+    for name in names:
+        eng = ServingEngine(tenants(only=name), mode="batched")
+        rep = eng.run(copy.deepcopy(
+            [r for r in trace if r.tenant == name]))
+        (req,) = rep.requests
+        assert req.tokens_out == toks["vliw"][name]
+
+
+# ---------------------------------------------------------------------------
+# cross-tenant expert-GEMM coalescing
+# ---------------------------------------------------------------------------
+
+def test_two_moe_tenants_coalesce_expert_gemms(rng):
+    """Two MoE tenants in lockstep: their per-expert FFN GEMMs (distinct
+    weights) coalesce into shared superkernel groups — counted by
+    JitStats.expert_coalesced — with per-tenant results unchanged."""
+    cfg = _moe_cfg(4)
+    m1, p1, c1, t1 = _setup(cfg, rng)
+    m2, p2, c2, t2 = _setup(cfg, jax.random.fold_in(rng, 1))
+    want1, _ = m1.decode_step(p1, t1, c1)
+    want2, _ = m2.decode_step(p2, t2, c2)
+    prog1 = build_moe_decode_template(m1, p1, 2).bind(
+        stream_id=0, tokens=t1, cache=c1)
+    prog2 = build_moe_decode_template(m2, p2, 2).bind(
+        stream_id=1, tokens=t2, cache=c2)
+    stats = VLIWJit(max_group=8).run([prog1, prog2])
+    assert stats.expert_coalesced >= 1
+    assert stats.mean_group > 1.0
+    np.testing.assert_allclose(prog1.env["logits"][:, None, :], want1,
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(prog2.env["logits"][:, None, :], want2,
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_same_params_moe_tenants_share_expert_operands(rng):
+    """Two tenants serving literally the same MoE params: each coalesced
+    expert group carries ONE weight key, so the superkernel loads the
+    expert's weights once (the shared-operand regime)."""
+    cfg = _moe_cfg(4)
+    m, params, cache, tok = _setup(cfg, rng)
+    cache2 = jax.tree_util.tree_map(lambda a: a, cache)  # fresh array tree
+    template = build_moe_decode_template(m, params, 2)
+    prog1 = template.bind(stream_id=0, tokens=tok, cache=cache)
+    prog2 = template.bind(stream_id=1, tokens=tok, cache=cache2)
+    stats = VLIWJit(max_group=8).run([prog1, prog2])
+    assert stats.shared_dispatches > 0
+    np.testing.assert_array_equal(np.asarray(prog1.env["logits"]),
+                                  np.asarray(prog2.env["logits"]))
+
+
+# ---------------------------------------------------------------------------
+# PlanCache byte budget with stacked expert packs (satellite regression)
+# ---------------------------------------------------------------------------
+
+def _rand(seed, shape):
+    return jax.random.normal(jax.random.PRNGKey(seed), shape, jnp.float32)
+
+
+def _expert_ops(slot: int, n_experts: int, seed0: int, m: int = 2,
+                k: int = 128, n: int = 256):
+    """One MoE expert-GEMM group: ``n_experts`` problems with distinct
+    per-expert weights, expert index in the weight key."""
+    a = _rand(0, (m, k))
+    ops = []
+    for e in range(n_experts):
+        op = make_op(slot, "gemv", GemmShape(m=m, n=n, k=k),
+                     tag="expert_gate", seq_index=e)
+        op.payload = (a, _rand(seed0 + e, (k, n)), ("moe", slot, "w_gate", e))
+        ops.append(op)
+    return ops
+
+
+def test_byte_budget_counts_full_stacked_expert_operand():
+    """The cached value is the FULL stacked expert operand — G bucketed to
+    a power of two — and ``PlanCache.bytes`` must account every byte of
+    it, not just the live experts' slices."""
+    cache = PlanCache(capacity=64, byte_capacity=1 << 30)
+    ex = SuperkernelExecutor(cache, bm=8)
+    ex.execute(_expert_ops(0, n_experts=3, seed0=10))   # G=3 -> G_pad=4
+    expected = 4 * 128 * 256 * 4                        # G_pad x K x N fp32
+    assert cache.bytes == expected
+    assert cache.bytes == sum(
+        int(getattr(e.value, "nbytes", 0)) for e in cache._entries.values())
+
+
+def test_byte_budget_evicts_expert_packs_lru():
+    """Expert packs past the byte budget evict LRU-first: the oldest
+    slots' packs go, the newest stay resident (re-dispatching the newest
+    hits, the oldest misses)."""
+    pack = 4 * 128 * 256 * 4
+    cache = PlanCache(capacity=64, byte_capacity=3 * pack + 1)
+    ex = SuperkernelExecutor(cache, bm=8)
+    groups = [_expert_ops(i, n_experts=3, seed0=100 + 10 * i)
+              for i in range(5)]
+    for g in groups:
+        ex.execute(g)
+    assert cache.bytes <= 3 * pack + 1
+    assert cache.stats.evictions == 2            # slots 0 and 1 reclaimed
+    misses0 = ex.stats.weight_misses
+    ex.execute(groups[-1])                       # newest: resident -> hit
+    assert ex.stats.weight_misses == misses0
+    assert ex.stats.weight_hits >= 1
+    ex.execute(groups[0])                        # oldest: evicted -> miss
+    assert ex.stats.weight_misses == misses0 + 1
+
+
+def test_oversized_pack_passes_through_without_wiping_cache():
+    """Regression: a pack bigger than the WHOLE byte budget used to evict
+    every resident entry and then sit over budget anyway (pinned as the
+    'newest'). It must pass through uncached, leaving the other tenants'
+    packs intact."""
+    small = _rand(1, (64, 64))                   # 16 KiB
+    cache = PlanCache(capacity=64, byte_capacity=4 * small.nbytes)
+    for i in range(3):
+        cache.get_or_build(("small", i), lambda: small)
+    bytes0 = cache.bytes
+    giant = _rand(2, (512, 512))                 # 1 MiB >> budget
+    out = cache.get_or_build(("giant",), lambda: giant)
+    assert out is giant                          # value still served
+    assert ("giant",) not in cache               # ...but not retained
+    assert len(cache) == 3 and cache.bytes == bytes0
+    assert cache.stats.evictions == 0            # nothing wiped
+    # and the smalls still hit
+    hits0 = cache.stats.hits
+    cache.get_or_build(("small", 0), lambda: None)
+    assert cache.stats.hits == hits0 + 1
