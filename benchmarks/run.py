@@ -17,7 +17,8 @@ from benchmarks import (dispatch_bench, e2e_slo_attainment,
                         fig6_coalescing, fig7_clustering,
                         moe_coalescing_bench, plan_cache_bench,
                         prefill_coalescing_bench, rnn_gemv_coalescing,
-                        roofline_report, table1_autotuning)
+                        roofline_report, stacked_depth_bench,
+                        table1_autotuning)
 
 MODULES = [
     ("fig3", fig3_batch_utilization),
@@ -33,6 +34,7 @@ MODULES = [
     ("prefill_coalescing", prefill_coalescing_bench),
     ("dispatch", dispatch_bench),
     ("moe_coalescing", moe_coalescing_bench),
+    ("stacked_depth", stacked_depth_bench),
 ]
 
 

@@ -47,7 +47,7 @@ class Cluster:
     @property
     def padded_flops(self) -> float:
         n, k = self.pad_n, self.pad_k
-        return sum(2.0 * s.m * n * k for s in self.members)
+        return sum(2.0 * s.m * n * k * s.layers for s in self.members)
 
     @property
     def padding_waste(self) -> float:
@@ -88,20 +88,63 @@ def cluster_greedy(shapes: Sequence[GemmShape], max_waste: float = 0.25
 
 
 # ---------------------------------------------------------------------------
-# weight-key tagging — the operand-identity layer of the coalescing space
+# weight-key schema — the operand-identity layer of the coalescing space
 # ---------------------------------------------------------------------------
-# Coalescing ELIGIBILITY is (n, k, dtype) only, but two finer identities ride
-# on the ops and matter to the dispatch layer:
+# Coalescing ELIGIBILITY is (n, k, dtype) only — or the full stack signature
+# for layer-stacked ops — but two finer identities ride on the ops and
+# matter to the dispatch layer:
 #   * the weight KEY (op.payload[2], attached by JitSession._push_op): ops
-#     sharing one key literally serve the same weight array, so the whole
+#     sharing one key literally serve the same weight array(s), so the whole
 #     group collapses to a single weight load (the shared-operand regime);
 #   * the EXPERT tag prefix: MoE tenants emit each expert FFN GEMM as its
 #     own stage tagged "expert_*" with the expert index in the weight key,
 #     so the same expert's GEMMs coalesce across tenants (and with dense
 #     FFN GEMMs sharing their (n, k)) — the scenario-diversity win counted
 #     by JitStats.expert_coalesced.
+#
+# ``weight_key`` below is THE single key constructor (used by core/jit.py
+# builders and core/dispatch.py matvec): the schema used to be rebuilt
+# ad-hoc at each emission site with the layer index assumed at a fixed
+# tuple position, which would have silently broken shared-operand detection
+# the moment stacked keys (no per-layer index) appeared. The shapes are:
+#
+#   per-layer operand   (model, pid, layer:int, name[, expert])
+#   stacked operand     (model, pid, "stack", lo, hi, name[, expert])
+#   model-level operand (model, pid, name)            e.g. "unembed"
+#   raw matvec          ("matvec"|"matvec-shared", id(w))
+#
+# The "stack" marker cannot collide with the other forms at position 2:
+# per-layer keys hold an int there and model-level keys hold an operand
+# name, which is never the reserved string "stack".
 
 EXPERT_TAG_PREFIX = "expert_"
+
+
+def weight_key(model_name: str, params_id: int, name: str, *,
+               layer=None, expert=None, stack=None) -> Tuple:
+    """Build an operand-identity key (single schema for all emitters).
+
+    ``stack=(lo, hi)`` names one stacked operand covering layers
+    [lo, hi) — one key per homogeneous sub-stack, layer index dropped.
+    ``layer`` names a per-layer slice (the stacked_layers=False oracle
+    path). Neither → a model-level operand (tied unembed etc.).
+    ``expert`` appends the MoE expert index in either regime.
+    """
+    if stack is not None:
+        lo, hi = stack
+        key: Tuple = (model_name, params_id, "stack", int(lo), int(hi), name)
+    elif layer is not None:
+        key = (model_name, params_id, int(layer), name)
+    else:
+        key = (model_name, params_id, name)
+    if expert is not None:
+        key = key + (int(expert),)
+    return key
+
+
+def matvec_weight_key(w, shared: bool = False) -> Tuple:
+    """Identity key for a raw (non-program) matvec weight array."""
+    return ("matvec-shared" if shared else "matvec", id(w))
 
 
 def op_weight_key(op: KernelOp):
@@ -122,12 +165,35 @@ def shared_weight_key(ops: Sequence[KernelOp]):
 
 
 def is_expert_op(op: KernelOp) -> bool:
-    """True for a per-expert MoE FFN GEMM (tag "expert_gate/up/down")."""
-    return op.tag.startswith(EXPERT_TAG_PREFIX)
+    """True for a per-expert MoE FFN GEMM (tag "expert_gate/up/down"),
+    or for a stacked layer body that carries expert operands."""
+    if op.tag.startswith(EXPERT_TAG_PREFIX):
+        return True
+    return op.stack is not None and any(
+        tag.startswith(EXPERT_TAG_PREFIX) for tag, _ in op.stack)
+
+
+def coalesce_key(op: KernelOp) -> Tuple:
+    """The op's zero-padding coalescing bucket.
+
+    Plain ops bucket on (n, k, dtype) — m stays free (problems concatenate
+    along m). A layer-stacked op buckets on its FULL stack signature: the
+    ordered (tag, layers, n, k, dtype) tuple of every operand in the
+    scanned body, m again free — so two tenants of the same depth-and-dims
+    config coalesce their *entire stacks* in one group, while differing
+    depths or operand sets (which could not share one scan) never mix.
+    The leading "stack" marker keeps stacked buckets disjoint from plain
+    (n, k, dtype) triples.
+    """
+    if op.stack is not None:
+        return ("stack",) + tuple(
+            (tag, s.layers, s.n, s.k, s.dtype_bytes) for tag, s in op.stack)
+    return exact_key(op.shape)
 
 
 def group_ops_exact(ops: Sequence[KernelOp]) -> Dict[Tuple, List[KernelOp]]:
-    """Bucket ready ops by zero-padding coalescing key (exact n, k, dtype).
+    """Bucket ready ops by zero-padding coalescing key (``coalesce_key``:
+    exact n, k, dtype — or the full stack signature for stacked ops).
 
     The m (token/row) dimension — and with it the gemv/gemm aspect and the
     decode/prefill phase — is deliberately NOT part of the key: coalesced
@@ -138,6 +204,6 @@ def group_ops_exact(ops: Sequence[KernelOp]) -> Dict[Tuple, List[KernelOp]]:
     """
     groups: Dict[Tuple, List[KernelOp]] = {}
     for op in ops:
-        key = exact_key(op.shape)
+        key = coalesce_key(op)
         groups.setdefault(key, []).append(op)
     return groups

@@ -76,8 +76,33 @@ class Coalescer:
         # same weights across streams (same model+tag) => operand sharing
         shared = len({(o.model_id, o.tag, o.seq_index) for o in ops}) == 1 \
             and len(ops) > 1
+        # layer-stacked groups (clustering.coalesce_key buckets them on the
+        # full stack signature, so a group is either all-stacked with one
+        # signature or all-plain): charge the group slot-by-slot — each
+        # operand position of the scanned body is one coalesced wave-train
+        # across the member streams, run sequentially
+        stacks = [o.stack for o in ops]
+        stacked = all(s is not None for s in stacks) and len(
+            {tuple((t_, sh.layers, sh.n, sh.k, sh.dtype_bytes)
+                   for t_, sh in s) for s in stacks}) == 1
 
         def derive() -> Tuple[BlockConfig, float, float]:
+            if stacked:
+                t = 0.0
+                useful = padded = 0.0
+                block = None
+                for slot in zip(*stacks):
+                    slot_shapes = [sh for _, sh in slot]
+                    c = Cluster(slot_shapes)
+                    useful += c.useful_flops
+                    padded += c.padded_flops
+                    b = self.block_for(slot_shapes)
+                    if block is None:
+                        block = b
+                    t += self.cost.coalesced_time(slot_shapes, b,
+                                                  shared_operand=shared)
+                waste = 0.0 if padded == 0 else 1.0 - useful / padded
+                return block or self.block_for(shapes), waste, t
             block = self.block_for(shapes)
             return (block, Cluster(list(shapes)).padding_waste,
                     self.cost.coalesced_time(shapes, block,
@@ -85,7 +110,11 @@ class Coalescer:
 
         if self.memo is not None:
             key = ("block",
-                   tuple((s.m, s.n, s.k, s.dtype_bytes) for s in shapes),
+                   tuple((s.m, s.n, s.k, s.dtype_bytes, s.layers)
+                         for s in shapes),
+                   tuple(tuple((t_, sh.m, sh.layers, sh.n, sh.k,
+                                sh.dtype_bytes) for t_, sh in st)
+                         for st in stacks) if stacked else None,
                    shared)
             block, waste, t = self.memo.get_or_build(key, derive)
         else:

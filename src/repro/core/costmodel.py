@@ -76,20 +76,29 @@ TPUV5E = Device(
 
 @dataclasses.dataclass(frozen=True)
 class GemmShape:
-    """One GEMM problem: C[m,n] += A[m,k] @ B[k,n]."""
+    """One GEMM problem: C[m,n] += A[m,k] @ B[k,n].
+
+    ``layers`` models a LAYER-STACKED operand (core/jit.py
+    ``StackedGemmStage``): one op that executes the same (m, n, k) GEMM
+    ``layers`` times sequentially inside a ``jax.lax.scan`` over a stacked
+    B[L,k,n]. The per-wave tile geometry (``CostModel.tiles``) is unchanged
+    — each scan step launches the same tile wave — while flops, bytes and
+    latency all scale by L (critical path = L·wave, not a single GEMM).
+    """
     m: int
     n: int
     k: int
     dtype_bytes: int = 2
+    layers: int = 1
 
     @property
     def flops(self) -> float:
-        return 2.0 * self.m * self.n * self.k
+        return 2.0 * self.m * self.n * self.k * self.layers
 
     @property
     def bytes(self) -> float:
-        return self.dtype_bytes * (self.m * self.k + self.k * self.n
-                                   + self.m * self.n)
+        return self.dtype_bytes * self.layers * (
+            self.m * self.k + self.k * self.n + self.m * self.n)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -150,7 +159,7 @@ class CostModel:
         a = shape.m * shape.k * n_tiles_n
         b = shape.k * shape.n * n_tiles_m
         c = shape.m * shape.n
-        return shape.dtype_bytes * (a + b + c)
+        return shape.dtype_bytes * shape.layers * (a + b + c)
 
     # ------------------------------------------------------------------
     def gemm_time(self, shape: GemmShape,
@@ -168,7 +177,8 @@ class CostModel:
         interference = 1.0 if co_tenants == 1 else 1.25  # calibrated, §4.2
         share = units / d.num_units
         padded = 2.0 * math.ceil(shape.m / block.bm) * block.bm \
-            * math.ceil(shape.n / block.bn) * block.bn * shape.k
+            * math.ceil(shape.n / block.bn) * block.bn * shape.k \
+            * shape.layers
         t_compute = self._compute_time(shape.flops,
                                        self.tiles(shape, block), block,
                                        units=units, share=share,
@@ -215,10 +225,12 @@ class CostModel:
             cat = GemmShape(m=sum(s.m for s in shapes),
                             n=max(s.n for s in shapes),
                             k=max(s.k for s in shapes),
-                            dtype_bytes=shapes[0].dtype_bytes)
+                            dtype_bytes=shapes[0].dtype_bytes,
+                            layers=max(s.layers for s in shapes))
             total_tiles = self.tiles(cat, block)
             padded = 2.0 * math.ceil(cat.m / block.bm) * block.bm \
-                * math.ceil(cat.n / block.bn) * block.bn * cat.k
+                * math.ceil(cat.n / block.bn) * block.bn * cat.k \
+                * cat.layers
             useful = sum(s.flops for s in shapes)
             io = self.gemm_bytes(cat, block)
         else:
@@ -226,7 +238,7 @@ class CostModel:
             # padded flops: every problem is rounded up to tile multiples
             padded = sum(
                 2.0 * math.ceil(s.m / block.bm) * block.bm
-                * math.ceil(s.n / block.bn) * block.bn * s.k
+                * math.ceil(s.n / block.bn) * block.bn * s.k * s.layers
                 for s in shapes)
             useful = sum(s.flops for s in shapes)
             io = sum(self.gemm_bytes(s, block) for s in shapes)

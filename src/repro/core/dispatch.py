@@ -68,6 +68,7 @@ from typing import List, Optional, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core.clustering import matvec_weight_key
 from repro.core.kernelspec import KernelOp
 from repro.core.plancache import PlanCache
 from repro.kernels.coalesced_gemm import coalesced_gemm
@@ -283,6 +284,50 @@ class SuperkernelExecutor:
         return value
 
     # ------------------------------------------------------------------
+    def stacked_operand(self, wkey: Tuple, k: int, n: int, layers: int,
+                        weight_fn, guard: Sequence[jax.Array], *,
+                        group=None) -> jax.Array:
+        """One LAYER-STACKED weight operand — [L, ..., K, N] padded to the
+        bucketed (K, N) envelope — from the persistent cache.
+
+        This is the stacked-template analogue of ``_packed_weights``: one
+        cache entry per stacked operand per params generation (entry count
+        per tenant O(#operands), not O(#operands × layers)), m-free so the
+        same entry serves decode, prefill and every batch size.
+
+        ``weight_fn`` builds the raw stacked array lazily (typically a
+        [lo:hi) slice of the params tree's stacked blocks) — it only runs
+        on a miss. ``guard`` must be the ORIGINAL stacked params arrays
+        (stable across ticks), never per-build slices: a fresh slice every
+        tick would read as a phantom hot-swap and repack the whole stack.
+        A real hot-swap replaces the params tree → new ``id(params)`` in
+        ``wkey`` → new cache key; ``group`` (params-free slot identity)
+        eagerly drops the superseded entry, exactly like
+        ``_packed_weights``."""
+        K = envelope_bucket(int(k))
+        N = envelope_bucket(int(n))
+        key = ("wstack", wkey, int(layers), K, N,
+               str(guard[0].dtype) if guard else "")
+
+        def build() -> jax.Array:
+            w = weight_fn()
+            pad = [(0, 0)] * (w.ndim - 2) + [(0, K - int(w.shape[-2])),
+                                             (0, N - int(w.shape[-1]))]
+            return jnp.pad(w, pad)
+
+        inval0 = self.weight_cache.stats.invalidations
+        value, hit = self.weight_cache.get_or_build_flagged(
+            key, build, guard=tuple(guard), group=group)
+        self.stats.weight_invalidations += \
+            self.weight_cache.stats.invalidations - inval0
+        if hit:
+            self.stats.weight_hits += 1
+            self.stats.bytes_not_copied += int(value.nbytes)
+        else:
+            self.stats.weight_misses += 1
+        return value
+
+    # ------------------------------------------------------------------
     def execute(self, ops: Sequence[KernelOp], *,
                 shared_operand: bool = False,
                 interpret: Optional[bool] = None) -> List[jax.Array]:
@@ -395,7 +440,7 @@ class SuperkernelExecutor:
         if all(w is ws[0] for w in ws):
             outs = self.execute_problems(
                 [(x[None, :], ws[0]) for x in xs],
-                [("matvec-shared", id(ws[0]))] * len(xs),
+                [matvec_weight_key(ws[0], shared=True)] * len(xs),
                 shared_operand=True, interpret=interpret, group=group)
             return [o[0] for o in outs]
         self.stats.dispatches += 1
@@ -404,7 +449,7 @@ class SuperkernelExecutor:
         G_pad = _pow2(G)
         K = envelope_bucket(max(int(w.shape[0]) for w in ws))
         N = envelope_bucket(max(int(w.shape[1]) for w in ws))
-        wkeys = [("matvec", id(w)) for w in ws]
+        wkeys = [matvec_weight_key(w) for w in ws]
         w_stacked = self._packed_weights(ws, wkeys, K, N, G_pad,
                                          shared=False, group=group)
         xs = tuple(xs)

@@ -59,6 +59,45 @@ bucketed to powers of two, and the whole pack→kernel→unpack dispatch is
 one jitted executable — so a stable trace runs zero-copy and zero-retrace
 after warmup (``JitStats.dispatch``).
 
+**Layer-stacked templates (scan-over-layers).** By default
+(``stacked_layers=True`` throughout) the builders emit ONE scanned layer
+body per homogeneous sub-stack of layers instead of ~6 stages per layer:
+the params tree already stores weights stacked along a leading layer axis,
+so a ``StackedGemmStage`` declares the whole sub-stack as one schedulable
+op whose operands are the stacked ``blocks`` arrays ([L, k, n] per
+projection, [L, E, k, n] for MoE expert packs) and whose execution is a
+jitted ``jax.lax.scan`` over the layer axis — template build, trace size
+and plan/weight-cache entries become O(1) in depth. Design points:
+
+  * weight-key schema (``clustering.weight_key`` is the single
+    constructor): stacked operands drop the layer index —
+    ``(model, pid, "stack", lo, hi, name[, expert])`` names ONE stacked
+    operand covering layers [lo, hi), so the dispatch executor caches
+    O(#operands) packed entries per tenant instead of O(#operands · L);
+  * sub-stack partitioning (``partition_layers``): non-homogeneous stacks
+    — gemma-style local/global attention alternation — split into maximal
+    homogeneous runs, each scanned separately (``is_global`` must be
+    static inside one scan body);
+  * scan carry layout: the residual stream ``x [B, d]`` is the carry;
+    per-layer xs are the norm scales, the layer's KV (or conv/h) cache
+    slices and the padded stacked weights; ys stack the per-layer cache
+    updates, which the epilogue concatenates back into the tenant's cache
+    — the same [L, ...] layout the per-layer path's ``jnp.stack`` built;
+  * the scan body's GEMMs (``_scan_gemm``) replicate the dispatch
+    executor's solo-dispatch bucketing EXACTLY (same m-tile bucket, same
+    power-of-two envelopes, same block sizes), which is what makes the
+    stacked path bit-identical to per-layer emission
+    (tests/test_stacked_templates.py asserts logits AND cache identity
+    for dense decode/prefill, MoE and SSM);
+  * cost/coalescing granularity: a stacked op is charged as L sequential
+    tile-waves (``GemmShape.layers``), clusters on its full stack
+    signature (``clustering.coalesce_key``) so only same-depth-and-dims
+    tenants coalesce entire stacks, and carries the dominant operand's
+    shape for EDF/aspect bookkeeping.
+
+``stacked_layers=False`` (builders + ServingEngine) keeps the per-layer
+emission path alive as the bit-identity oracle.
+
 Correctness: running a program must produce bit-comparable results to the
 monolithic ``Model.decode_step`` (tests/test_jit_engine.py), regardless of
 admission timing (tests/test_event_loop.py).
@@ -74,13 +113,15 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.core.clustering import is_expert_op, shared_weight_key
+from repro.core.clustering import is_expert_op, shared_weight_key, weight_key
 from repro.core.coalescer import Coalescer
 from repro.core.costmodel import CostModel, GemmShape, TPUV5E
-from repro.core.dispatch import DispatchStats, SuperkernelExecutor
+from repro.core.dispatch import (DispatchStats, SuperkernelExecutor,
+                                 _tile_bucket, envelope_bucket)
 from repro.core.kernelspec import make_op, op_aspect
 from repro.core.plancache import PlanCache, PlanCacheStats
 from repro.core.scheduler import OoOScheduler, SchedulerConfig
+from repro.kernels.coalesced_gemm import coalesced_gemm
 from repro.models.layers import rmsnorm, apply_rope
 
 
@@ -108,7 +149,88 @@ class GlueStage:
     fn: Callable[[Dict[str, Any]], None]
 
 
-Stage = Any  # GemmStage | GlueStage
+def partition_layers(flags: Sequence[bool]) -> List[Tuple[int, int]]:
+    """Partition a layer-flag sequence into maximal homogeneous runs.
+
+    Returns half-open ``(lo, hi)`` spans covering ``range(len(flags))``
+    exactly once, in order, with the flag constant inside each span — the
+    sub-stacks a non-homogeneous model (``layer_is_global`` alternation)
+    scans separately, because the flag must be static inside one scan
+    body. A homogeneous depth-L model yields the single span ``(0, L)``.
+    """
+    runs: List[Tuple[int, int]] = []
+    lo = 0
+    for i in range(1, len(flags)):
+        if flags[i] != flags[lo]:
+            runs.append((lo, i))
+            lo = i
+    if len(flags):
+        runs.append((lo, len(flags)))
+    return runs
+
+
+@dataclasses.dataclass
+class StackedOperand:
+    """One stacked weight operand of a scanned layer body: a
+    ``[Lsub, ..., k, n]`` array covering a homogeneous sub-stack of layers
+    (MoE expert packs carry an extra expert axis). ``shape.layers`` counts
+    the operand's sequential tile-waves — Lsub for dense operands,
+    Lsub·E for expert packs (each scan step runs E expert GEMMs)."""
+
+    tag: str                       # per-layer stage tag, e.g. "ffn_gate"
+    weight_key: Tuple              # clustering.weight_key(..., stack=...)
+    shape: GemmShape               # per-wave (m, n, k) with layers = waves
+    # lazy builder of the raw stacked array (a [lo:hi) view of the params
+    # tree's stacked blocks) — only runs on an operand-cache miss
+    weight_fn: Callable[[], jax.Array]
+    # identity guard: the ORIGINAL stacked params arrays (stable across
+    # ticks) — never per-build slices, which would read as phantom
+    # hot-swaps and repack the whole stack every tick
+    guard: Tuple = ()
+
+
+@dataclasses.dataclass
+class StackedGemmStage:
+    """One scanned layer body: a whole homogeneous sub-stack of layers as
+    a single schedulable op (the stacked-template analogue of ~6·Lsub
+    ``GemmStage``s). The session fetches each operand's padded stack from
+    the executor's persistent cache (``SuperkernelExecutor.
+    stacked_operand``) and calls ``run`` — a jitted ``jax.lax.scan`` whose
+    body replays the per-layer math with ``_scan_gemm`` standing in for
+    the executor's solo dispatch, bit-identically."""
+
+    tag: str                       # body identity, e.g. "body_0_12"
+    weight_key: Tuple              # clustering.weight_key("body", stack=...)
+    operands: List[StackedOperand]
+    layers: int                    # hi - lo
+    # run(env, {operand tag -> padded stacked array}, executor): executes
+    # the scan and writes results (residual stream, cache updates) to env
+    run: Callable[[Dict[str, Any], Dict[str, jax.Array],
+                   SuperkernelExecutor], None]
+
+
+Stage = Any  # GemmStage | GlueStage | StackedGemmStage
+
+
+def _scan_gemm(a: jax.Array, w_pad: jax.Array, n_real: int, *, bm: int,
+               bn: int, bk: int, interpret: bool) -> jax.Array:
+    """One GEMM inside a scanned layer body, replicating the dispatch
+    executor's solo dispatch EXACTLY — same m-tile bucket, same padded
+    (K, N) envelope (``w_pad`` is one xs slice of a cached
+    ``stacked_operand``), same block clamping — so a stacked body is
+    bit-identical to the per-layer path dispatching each stage."""
+    m = int(a.shape[0])
+    K, N = int(w_pad.shape[-2]), int(w_pad.shape[-1])
+    m_tiles = _tile_bucket([m], bm)
+    ap = jnp.pad(a, ((0, m_tiles * bm - m), (0, K - int(a.shape[1]))))
+    out = coalesced_gemm(ap, w_pad[None], jnp.zeros((m_tiles,), jnp.int32),
+                         bm=bm, bn=min(bn, N), bk=min(bk, K),
+                         interpret=interpret)
+    return out[:m, :n_real]
+
+
+def _stack_slice(arr: jax.Array, lo: int, hi: int) -> jax.Array:
+    return arr if lo == 0 and hi == int(arr.shape[0]) else arr[lo:hi]
 
 
 @dataclasses.dataclass
@@ -148,11 +270,12 @@ class KernelProgram:
     def done(self) -> bool:
         return self.pc >= len(self.stages)
 
-    def advance_glue(self) -> Optional[GemmStage]:
-        """Run glue stages until the next GEMM (or completion)."""
+    def advance_glue(self) -> Optional[Stage]:
+        """Run glue stages until the next GEMM / stacked body stage (or
+        completion)."""
         while self.pc < len(self.stages):
             st = self.stages[self.pc]
-            if isinstance(st, GemmStage):
+            if isinstance(st, (GemmStage, StackedGemmStage)):
                 return st
             st.fn(self.env)
             self.pc += 1
@@ -190,6 +313,10 @@ def _gemm_suffix_table(stages: List[Stage], batch: int,
                 shape = GemmShape(m=batch, n=int(w.shape[1]),
                                   k=int(w.shape[0]))
             dt = cost.gemm_time(shape)
+        elif isinstance(st, StackedGemmStage):
+            # every operand's GemmShape carries its wave count in .layers,
+            # so the body's critical path is the plain sum of gemm_time
+            dt = sum(cost.gemm_time(od.shape) for od in st.operands)
         suf[i] = suf[i + 1] + dt
     return suf
 
@@ -259,17 +386,23 @@ class ProgramTemplate:
                              _suffix_fn=self.gemm_suffix)
 
 
-def dense_program_cache_key(model, params, batch: int, cache) -> Tuple:
+def dense_program_cache_key(model, params, batch: int, cache, *,
+                            stacked: bool = True) -> Tuple:
     """Plan-cache key for a dense decode template: (model identity, active
     batch m, dtype, cache geometry). Params identity is deliberately NOT in
     the key — a weight hot-swap lands on the same slot and is caught by the
     cache's identity guard (``guard=(model, params)`` at the lookup site),
     which invalidates (and counts) instead of silently serving stale
     closures. The guard also pins both objects, so ``id(model)`` here can
-    never be a recycled address aliasing a dead model."""
+    never be a recycled address aliasing a dead model.
+
+    The emission regime and depth are part of the key: a stacked and a
+    per-layer template of the same model must never alias, and stacked
+    geometry (sub-stack spans) is a function of num_layers."""
     kc = cache["layers"]["k"]
     return ("dense-decode", model.cfg.name, id(model), batch,
-            str(params["embed"].dtype), str(kc.dtype), tuple(kc.shape))
+            str(params["embed"].dtype), str(kc.dtype), tuple(kc.shape),
+            ("stacked", bool(stacked), model.cfg.num_layers))
 
 
 # ---------------------------------------------------------------------------
@@ -319,14 +452,14 @@ def _emit_dense_body(cfg: ModelConfig, params, stages: List[Stage], *,
         glue(pre_attn)
         for name, n_heads in (("wq", cfg.num_heads), ("wk", cfg.num_kv_heads),
                               ("wv", cfg.num_kv_heads)):
-            gemm(f"attn_{name}", (cfg.name, pid, l, name),
+            gemm(f"attn_{name}", weight_key(cfg.name, pid, name, layer=l),
                  lambda lp=lp, name=name: lp["attn"][name],
                  lambda env: env["h"],
                  lambda env, out, name=name: env.__setitem__(name, out),
                  n_heads * hd, cfg.d_model)
 
         glue(attend_for(l, lp, is_global))
-        gemm("attn_wo", (cfg.name, pid, l, "wo"),
+        gemm("attn_wo", weight_key(cfg.name, pid, "wo", layer=l),
              lambda lp=lp: lp["attn"]["wo"],
              lambda env: env["attn_out"],
              lambda env, out: env.__setitem__("attn_proj", out),
@@ -340,22 +473,22 @@ def _emit_dense_body(cfg: ModelConfig, params, stages: List[Stage], *,
         if ffn_for is not None:
             ffn_for(l, lp, stages)
             continue
-        gemm("ffn_gate", (cfg.name, pid, l, "w_gate"),
+        gemm("ffn_gate", weight_key(cfg.name, pid, "w_gate", layer=l),
              lambda lp=lp: lp["mlp"]["w_gate"],
              lambda env: env["h2"],
              lambda env, out: env.__setitem__("gate", out),
              cfg.d_ff, cfg.d_model)
-        gemm("ffn_up", (cfg.name, pid, l, "w_up"),
+        gemm("ffn_up", weight_key(cfg.name, pid, "w_up", layer=l),
              lambda lp=lp: lp["mlp"]["w_up"],
              lambda env: env["h2"],
              lambda env, out: env.__setitem__("up", out),
              cfg.d_ff, cfg.d_model)
 
         def act(env):
-            env["act"] = jax.nn.silu(env["gate"]) * env["up"]
+            env["act"] = _silu_mul(env["gate"], env["up"])
 
         glue(act)
-        gemm("ffn_down", (cfg.name, pid, l, "w_down"),
+        gemm("ffn_down", weight_key(cfg.name, pid, "w_down", layer=l),
              lambda lp=lp: lp["mlp"]["w_down"],
              lambda env: env["act"],
              lambda env, out: env.__setitem__("down", out),
@@ -435,58 +568,339 @@ def _emit_unembed(cfg: ModelConfig, params, stages: List[Stage], *,
     else:
         wfn, n = (lambda: params["unembed"]), int(params["unembed"].shape[1])
     stages.append(GemmStage(
-        "unembed", (cfg.name, pid, "unembed"), wfn,
+        "unembed", weight_key(cfg.name, pid, "unembed"), wfn,
         lambda env: env["hf"],
         lambda env, out: env.__setitem__("logits", out),
         shape=GemmShape(m=m_rows, n=n, k=cfg.d_model)))
+
+
+def _gqa_decode_attend(cfg: ModelConfig, B: int, q_flat, k_flat, v_flat,
+                       kc, vc, pos, is_global: bool, out_dtype
+                       ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """One layer of single-token slotted-cache GQA attention: the PURE math
+    shared verbatim by the per-layer glue (``_decode_attend_for``) and the
+    stacked scan body — one copy so the two paths cannot drift. ``kc``/
+    ``vc`` are the layer's cache slices [B, Hkv, S, hd]; returns
+    (attn_out [B, H·hd], new kc, new vc)."""
+    hd = cfg.resolved_head_dim
+    q = q_flat.reshape(B, 1, cfg.num_heads, hd)
+    k = k_flat.reshape(B, 1, cfg.num_kv_heads, hd)
+    v = v_flat.reshape(B, 1, cfg.num_kv_heads, hd)
+    posb = pos[:, None]
+    q = apply_rope(q, posb, cfg.rope_theta)
+    k = apply_rope(k, posb, cfg.rope_theta)
+    upd = jax.vmap(lambda c, kn, p: jax.lax.dynamic_update_slice(
+        c, kn, (0, p, 0)))
+    kc = upd(kc, k.transpose(0, 2, 1, 3).astype(kc.dtype), pos)
+    vc = upd(vc, v.transpose(0, 2, 1, 3).astype(vc.dtype), pos)
+    S = kc.shape[2]
+    G = cfg.num_heads // cfg.num_kv_heads
+    qg = q.reshape(B, 1, cfg.num_kv_heads, G, hd)
+    scores = jnp.einsum("bshgd,bhtd->bhgst", qg, kc,
+                        preferred_element_type=jnp.float32)
+    scores = scores / jnp.sqrt(jnp.float32(hd))
+    idx = jnp.arange(S)
+    ok = idx[None, :] <= pos[:, None]
+    if cfg.window_size > 0 and not is_global:
+        ok = ok & (idx[None, :] > (pos[:, None] - cfg.window_size))
+    scores = jnp.where(ok[:, None, None, None, :], scores, -2.0e38)
+    p = jax.nn.softmax(scores, axis=-1)
+    o = jnp.einsum("bhgst,bhtd->bshgd", p, vc.astype(jnp.float32))
+    return (o.reshape(B, cfg.num_heads * hd).astype(out_dtype), kc, vc)
+
+
+# ---------------------------------------------------------------------------
+# jitted per-layer glue — the bit-identity bridge to the stacked regime
+# ---------------------------------------------------------------------------
+# XLA CPU contracts mul→add chains into FMAs (and loop-fuses
+# transcendentals) when compiling a jitted program, but not when executing
+# the same ops eagerly one by one — so per-layer glue running eager math
+# computes different last-ulp bits than the SAME helper inlined in a jitted
+# scan body. Standalone-jitting a helper is bitwise identical to inlining
+# it in a jitted scan (measured on this backend), so the per-layer (oracle)
+# glue calls these memoized jit wrappers instead of the raw helpers: both
+# template regimes then execute jit-compiled bits and the
+# stacked-vs-per-layer contract is exact token/cache equality.
+# ModelConfig/SSMConfig/MoEConfig are frozen dataclasses, so configs key
+# the memo by VALUE — two tenants of the same architecture share entries.
+_GLUE_JITS: Dict[Tuple, Callable] = {}
+
+# silu(gate) ⊙ up — the gated-FFN activation glue (dense layers and MoE
+# per-expert stages). jax.jit traces lazily per (shape, dtype).
+_silu_mul = jax.jit(lambda gate, up: jax.nn.silu(gate) * up)
+
+
+def _jitted_decode_attend(cfg: ModelConfig, B: int, is_global: bool,
+                          out_dtype) -> Callable:
+    key = ("decode-attend", cfg, B, bool(is_global),
+           jnp.dtype(out_dtype).name)
+    fn = _GLUE_JITS.get(key)
+    if fn is None:
+        def attend(q, k, v, kc, vc, pos):
+            return _gqa_decode_attend(cfg, B, q, k, v, kc, vc, pos,
+                                      is_global, out_dtype)
+
+        fn = _GLUE_JITS[key] = jax.jit(attend)
+    return fn
+
+
+def _jitted_prefill_attend(cfg: ModelConfig, Sp: int, is_global: bool,
+                           out_dtype) -> Callable:
+    key = ("prefill-attend", cfg, Sp, bool(is_global),
+           jnp.dtype(out_dtype).name)
+    fn = _GLUE_JITS.get(key)
+    if fn is None:
+        def attend(q, k, v, positions):
+            return _causal_prefill_attend(cfg, Sp, q, k, v, positions,
+                                          is_global, out_dtype)
+
+        fn = _GLUE_JITS[key] = jax.jit(attend)
+    return fn
+
+
+def _jitted_moe_route(cfg: ModelConfig, B: int, C: int) -> Callable:
+    from repro.models import moe as moe_lib
+    mcfg = cfg.moe
+    key = ("moe-route", cfg, B, C)
+    fn = _GLUE_JITS.get(key)
+    if fn is None:
+        E, top_k, d = mcfg.num_experts, mcfg.top_k, cfg.d_model
+
+        def route_dispatch(router_p, h2):
+            weights, experts, _aux = moe_lib.route(router_p, h2, mcfg)
+            xg = h2.reshape(1, B, d)
+            wgt = weights.reshape(1, B, top_k)
+            eg = experts.reshape(1, B, top_k)
+            buf, meta = jax.vmap(
+                lambda xx, ww, ee: moe_lib.dispatch_tokens(
+                    xx, ww, ee, E, top_k, C))(xg, wgt, eg)
+            return buf, meta, wgt
+
+        fn = _GLUE_JITS[key] = jax.jit(route_dispatch)
+    return fn
+
+
+def _jitted_moe_combine(cfg: ModelConfig, B: int) -> Callable:
+    from repro.models import moe as moe_lib
+    key = ("moe-combine", cfg, B)
+    fn = _GLUE_JITS.get(key)
+    if fn is None:
+        d = cfg.d_model
+
+        def combine(out_buf, wgt, meta):
+            return jax.vmap(
+                lambda ob, ww, mm: moe_lib.combine_tokens(
+                    ob, ww.reshape(-1), mm, B, d))(out_buf, wgt, meta)
+
+        fn = _GLUE_JITS[key] = jax.jit(combine)
+    return fn
+
+
+def _jitted_ssm_core(cfg: ModelConfig) -> Callable:
+    from repro.models import ssm as ssm_lib
+    key = ("ssm-core", cfg)
+    fn = _GLUE_JITS.get(key)
+    if fn is None:
+        scfg, d = cfg.ssm, cfg.d_model
+
+        def core(mamba_p, zxbcdt, conv, h):
+            return ssm_lib.decode_core(mamba_p, zxbcdt,
+                                       {"conv": conv, "h": h}, scfg, d)
+
+        fn = _GLUE_JITS[key] = jax.jit(core)
+    return fn
 
 
 def _decode_attend_for(cfg: ModelConfig, B: int):
     """Single-token slotted-cache attention glue factory, shared by the
     dense and MoE decode builders (MoE layers keep standard GQA attention,
     so both families must stay byte-identical here)."""
-    hd = cfg.resolved_head_dim
 
     def attend_for(l, lp, is_global):
         # one new token per row against the slotted cache, per-row positions
-        def attend(env, lp=lp, l=l, is_global=is_global):
+        def attend(env, l=l, is_global=is_global):
             cache = env["cache"]
             pos = jnp.broadcast_to(jnp.asarray(cache["pos"]), (B,))
-            q = env["wq"].reshape(B, 1, cfg.num_heads, hd)
-            k = env["wk"].reshape(B, 1, cfg.num_kv_heads, hd)
-            v = env["wv"].reshape(B, 1, cfg.num_kv_heads, hd)
-            posb = pos[:, None]
-            q = apply_rope(q, posb, cfg.rope_theta)
-            k = apply_rope(k, posb, cfg.rope_theta)
-            upd = jax.vmap(lambda c, kn, p: jax.lax.dynamic_update_slice(
-                c, kn, (0, p, 0)))
-            kc = upd(cache["layers"]["k"][l],
-                     k.transpose(0, 2, 1, 3).astype(
-                         cache["layers"]["k"].dtype), pos)
-            vc = upd(cache["layers"]["v"][l],
-                     v.transpose(0, 2, 1, 3).astype(
-                         cache["layers"]["v"].dtype), pos)
+            attn_out, kc, vc = _jitted_decode_attend(
+                cfg, B, is_global, env["h"].dtype)(
+                env["wq"], env["wk"], env["wv"],
+                cache["layers"]["k"][l], cache["layers"]["v"][l], pos)
             env["new_layers"]["k"].append(kc)
             env["new_layers"]["v"].append(vc)
-            S = kc.shape[2]
-            G = cfg.num_heads // cfg.num_kv_heads
-            qg = q.reshape(B, 1, cfg.num_kv_heads, G, hd)
-            scores = jnp.einsum("bshgd,bhtd->bhgst", qg, kc,
-                                preferred_element_type=jnp.float32)
-            scores = scores / jnp.sqrt(jnp.float32(hd))
-            idx = jnp.arange(S)
-            ok = idx[None, :] <= pos[:, None]
-            if cfg.window_size > 0 and not is_global:
-                ok = ok & (idx[None, :] > (pos[:, None] - cfg.window_size))
-            scores = jnp.where(ok[:, None, None, None, :], scores, -2.0e38)
-            p = jax.nn.softmax(scores, axis=-1)
-            o = jnp.einsum("bhgst,bhtd->bshgd", p, vc.astype(jnp.float32))
-            env["attn_out"] = o.reshape(B, cfg.num_heads * hd).astype(
-                env["h"].dtype)
+            env["attn_out"] = attn_out
 
         return attend
 
     return attend_for
+
+
+def _stacked_dense_body_stage(model, params, B: int, lo: int, hi: int, *,
+                              moe: bool = False) -> StackedGemmStage:
+    """ONE scanned decode body covering layers [lo, hi) of a GQA model —
+    the stacked replacement for ~6·Lsub (dense) or (4+3·E)·Lsub (MoE)
+    per-layer stages. The scan body replays the per-layer math exactly:
+    ``_scan_gemm`` for every projection (replicating the executor's solo
+    dispatch), ``_gqa_decode_attend`` for attention, and the literal
+    ``moe_lib`` route/dispatch/combine calls for the MoE FFN."""
+    cfg: ModelConfig = model.cfg
+    hd = cfg.resolved_head_dim
+    d = cfg.d_model
+    eps = cfg.norm_eps
+    blocks = params["blocks"]
+    pid = id(params)
+    Lsub = hi - lo
+    is_global = bool(cfg.layer_is_global(lo))
+
+    def sop(tag, name, arr, m, n, k, layers=Lsub):
+        return StackedOperand(
+            tag, weight_key(cfg.name, pid, name, stack=(lo, hi)),
+            GemmShape(m=m, n=n, k=k, layers=layers),
+            lambda a=arr: _stack_slice(a, lo, hi), (arr,))
+
+    attn = blocks["attn"]
+    operands = [
+        sop("attn_wq", "wq", attn["wq"], B, cfg.num_heads * hd, d),
+        sop("attn_wk", "wk", attn["wk"], B, cfg.num_kv_heads * hd, d),
+        sop("attn_wv", "wv", attn["wv"], B, cfg.num_kv_heads * hd, d),
+        sop("attn_wo", "wo", attn["wo"], B, d, cfg.num_heads * hd),
+    ]
+    if moe:
+        from repro.models import moe as moe_lib
+        mcfg = cfg.moe
+        E, top_k = mcfg.num_experts, mcfg.top_k
+        C = moe_lib.capacity(B, mcfg)
+        mp = blocks["moe"]
+        # expert packs keep the "expert_*" tags (clustering.is_expert_op
+        # detects them through op.stack); layers = Lsub·E waves because
+        # each scan step runs E per-expert GEMMs sequentially
+        operands += [
+            sop("expert_gate", "w_gate", mp["w_gate"], C, cfg.d_ff, d,
+                Lsub * E),
+            sop("expert_up", "w_up", mp["w_up"], C, cfg.d_ff, d, Lsub * E),
+            sop("expert_down", "w_down", mp["w_down"], C, d, cfg.d_ff,
+                Lsub * E),
+        ]
+        routers = _stack_slice(mp["router"], lo, hi)
+    else:
+        mlp = blocks["mlp"]
+        operands += [
+            sop("ffn_gate", "w_gate", mlp["w_gate"], B, cfg.d_ff, d),
+            sop("ffn_up", "w_up", mlp["w_up"], B, cfg.d_ff, d),
+            sop("ffn_down", "w_down", mlp["w_down"], B, d, cfg.d_ff),
+        ]
+    ln1s = _stack_slice(blocks["ln1"], lo, hi)
+    ln2s = _stack_slice(blocks["ln2"], lo, hi)
+    # one jitted scan per executor block signature, memoized for the
+    # template's lifetime (templates live in the JIT's plan cache, so the
+    # steady state reuses one compiled executable)
+    jits: Dict[Tuple, Callable] = {}
+
+    def make_scan(bm: int, bn: int, bk: int, interpret: bool):
+        def gemm(a, w, n):
+            return _scan_gemm(a, w, n, bm=bm, bn=bn, bk=bk,
+                              interpret=interpret)
+
+        # every per-layer param enters as a jit ARGUMENT (via xs), never a
+        # closure: XLA codegens array CONSTANTS differently than traced
+        # arguments in the last ulp (measured on decode_core's einsum
+        # chain), and the per-layer oracle's jitted glue receives the same
+        # arrays as arguments — bit-identity requires matching regimes
+        def scan_fn(x, pos_in, kc_full, vc_full, w, aux):
+            pos = jnp.broadcast_to(pos_in, (B,))
+
+            def body(carry, per):
+                wl = per["w"]
+                h = rmsnorm(carry, per["ln1"], eps)
+                q = gemm(h, wl["attn_wq"], cfg.num_heads * hd)
+                k = gemm(h, wl["attn_wk"], cfg.num_kv_heads * hd)
+                v = gemm(h, wl["attn_wv"], cfg.num_kv_heads * hd)
+                attn_out, kc_new, vc_new = _gqa_decode_attend(
+                    cfg, B, q, k, v, per["kc"], per["vc"], pos, is_global,
+                    h.dtype)
+                x2 = carry + gemm(attn_out, wl["attn_wo"], d)
+                h2 = rmsnorm(x2, per["ln2"], eps)
+                if moe:
+                    weights, experts, _aux = moe_lib.route(
+                        per["router"], h2, mcfg)
+                    xg = h2.reshape(1, B, d)
+                    wgt = weights.reshape(1, B, top_k)
+                    eg = experts.reshape(1, B, top_k)
+                    buf, meta = jax.vmap(
+                        lambda xx, ww, ee: moe_lib.dispatch_tokens(
+                            xx, ww, ee, E, top_k, C))(xg, wgt, eg)
+                    downs = []
+                    for e in range(E):
+                        ge = gemm(buf[0, e], wl["expert_gate"][e], cfg.d_ff)
+                        ue = gemm(buf[0, e], wl["expert_up"][e], cfg.d_ff)
+                        downs.append(gemm(jax.nn.silu(ge) * ue,
+                                          wl["expert_down"][e], d))
+                    out_buf = jnp.stack(downs, axis=0)[None]
+                    y = jax.vmap(
+                        lambda ob, ww, mm: moe_lib.combine_tokens(
+                            ob, ww.reshape(-1), mm, B, d))(out_buf, wgt,
+                                                           meta)
+                    x3 = x2 + y.reshape(B, d).astype(h2.dtype)
+                else:
+                    gate = gemm(h2, wl["ffn_gate"], cfg.d_ff)
+                    up = gemm(h2, wl["ffn_up"], cfg.d_ff)
+                    x3 = x2 + gemm(jax.nn.silu(gate) * up, wl["ffn_down"],
+                                   d)
+                return x3, (kc_new, vc_new)
+
+            xs = dict(aux, kc=kc_full[lo:hi], vc=vc_full[lo:hi], w=w)
+            return jax.lax.scan(body, x, xs)
+
+        return scan_fn
+
+    aux = {"ln1": ln1s, "ln2": ln2s}
+    if moe:
+        aux["router"] = routers
+
+    def run(env, padded, ex):
+        key = (ex.bm, ex.bn, ex.bk, ex.interpret)
+        fn = jits.get(key)
+        if fn is None:
+            fn = jits[key] = jax.jit(make_scan(*key))
+        cache = env["cache"]
+        x, (kc_new, vc_new) = fn(env["x"], jnp.asarray(cache["pos"]),
+                                 cache["layers"]["k"], cache["layers"]["v"],
+                                 padded, aux)
+        env["x"] = x
+        env["new_layers"]["k"].append(kc_new)
+        env["new_layers"]["v"].append(vc_new)
+
+    return StackedGemmStage(
+        tag=f"body_{lo}_{hi}",
+        weight_key=weight_key(cfg.name, pid, "body", stack=(lo, hi)),
+        operands=operands, layers=Lsub, run=run)
+
+
+def _build_stacked_gqa_decode_template(model, params, batch: int, *,
+                                       moe: bool = False) -> ProgramTemplate:
+    """Stacked counterpart of ``_build_gqa_decode_template``: one scanned
+    body stage per homogeneous sub-stack instead of per-layer emission.
+    The epilogue concatenates the bodies' [Lsub, ...] cache updates —
+    the same [L, ...] layout the per-layer path's ``jnp.stack`` built."""
+    cfg: ModelConfig = model.cfg
+    stages: List[Stage] = []
+    _emit_decode_embed(cfg, params, stages)
+    for lo, hi in partition_layers(cfg.global_layer_flags()):
+        stages.append(_stacked_dense_body_stage(model, params, batch,
+                                                lo, hi, moe=moe))
+    _emit_final_logits(cfg, params, stages, m_rows=batch)
+
+    def finish(env):
+        cache = env["cache"]
+        env["cache"] = {
+            "pos": cache["pos"] + 1,
+            "layers": {
+                "k": jnp.concatenate(env["new_layers"]["k"], axis=0),
+                "v": jnp.concatenate(env["new_layers"]["v"], axis=0),
+            },
+        }
+
+    stages.append(GlueStage(finish))
+    return ProgramTemplate(stages=stages, batch=batch, model_name=cfg.name)
 
 
 def _build_gqa_decode_template(model, params, batch: int, *,
@@ -521,15 +935,22 @@ def _build_gqa_decode_template(model, params, batch: int, *,
     return ProgramTemplate(stages=stages, batch=B, model_name=cfg.name)
 
 
-def build_dense_decode_template(model, params, batch: int) -> ProgramTemplate:
+def build_dense_decode_template(model, params, batch: int, *,
+                                stacked: bool = True) -> ProgramTemplate:
     """Compile the decode step of a dense GQA model into a ProgramTemplate.
 
     Equivalent to ``Model.decode_step`` but with every projection GEMM
     declared to the JIT. Supported: arch_type 'dense' (and the text path of
     'vlm'). Per-step inputs (tokens [B, 1], KV cache) are read from the
     bound program's env, so one template serves every steady-state step.
+
+    ``stacked=True`` (default) emits one scanned body per homogeneous
+    layer sub-stack — O(1)-in-depth build; ``stacked=False`` keeps the
+    per-layer emission (the bit-identity oracle).
     """
     assert model.cfg.arch_type in ("dense", "vlm"), model.cfg.arch_type
+    if stacked:
+        return _build_stacked_gqa_decode_template(model, params, batch)
     return _build_gqa_decode_template(model, params, batch)
 
 
@@ -537,18 +958,27 @@ def build_dense_decode_template(model, params, batch: int) -> ProgramTemplate:
 # non-dense decode programs: MoE and SSM tenants as first-class streams
 # ---------------------------------------------------------------------------
 
-def moe_program_cache_key(model, params, batch: int, cache) -> Tuple:
+def moe_program_cache_key(model, params, batch: int, cache, *,
+                          stacked: bool = True) -> Tuple:
     """Plan-cache key for an MoE decode template. Same discipline as
     ``dense_program_cache_key`` (params identity lives in the lookup-site
     guard, not the key); the expert capacity C is a pure function of
     (batch, cfg.moe), both captured here via batch + model identity."""
     kc = cache["layers"]["k"]
     return ("moe-decode", model.cfg.name, id(model), batch,
-            str(params["embed"].dtype), str(kc.dtype), tuple(kc.shape))
+            str(params["embed"].dtype), str(kc.dtype), tuple(kc.shape),
+            ("stacked", bool(stacked), model.cfg.num_layers))
 
 
-def build_moe_decode_template(model, params, batch: int) -> ProgramTemplate:
+def build_moe_decode_template(model, params, batch: int, *,
+                              stacked: bool = True) -> ProgramTemplate:
     """Compile the decode step of an MoE model into a ProgramTemplate.
+
+    ``stacked=True`` (default) emits one scanned body per homogeneous
+    sub-stack — the router/dispatch/combine glue runs INSIDE the scan body
+    and the 3 expert packs become [Lsub, E, k, n] stacked operands;
+    ``stacked=False`` keeps the per-layer 3·E-GemmStage emission below
+    (the bit-identity oracle).
 
     Equivalent to ``Model.decode_step`` for arch_type 'moe': the attention
     scaffolding is the SAME emission as the dense builder (so MoE attention
@@ -575,6 +1005,9 @@ def build_moe_decode_template(model, params, batch: int) -> ProgramTemplate:
     """
     cfg: ModelConfig = model.cfg
     assert cfg.arch_type == "moe" and cfg.has_moe, cfg.arch_type
+    if stacked:
+        return _build_stacked_gqa_decode_template(model, params, batch,
+                                                  moe=True)
     from repro.models import moe as moe_lib
     mcfg = cfg.moe
     B, d = batch, cfg.d_model
@@ -591,14 +1024,8 @@ def build_moe_decode_template(model, params, batch: int) -> ProgramTemplate:
             stages.append(GlueStage(fn))
 
         def route_dispatch(env, moe_p=moe_p):
-            h2 = env["h2"]
-            weights, experts, _aux = moe_lib.route(moe_p["router"], h2, mcfg)
-            xg = h2.reshape(1, B, d)
-            wgt = weights.reshape(1, B, top_k)
-            eg = experts.reshape(1, B, top_k)
-            buf, meta = jax.vmap(
-                lambda xx, ww, ee: moe_lib.dispatch_tokens(
-                    xx, ww, ee, E, top_k, C))(xg, wgt, eg)
+            buf, meta, wgt = _jitted_moe_route(cfg, B, C)(
+                moe_p["router"], env["h2"])
             env["moe_buf"], env["moe_meta"] = buf, meta
             env["moe_w"] = wgt
             env["moe_down"] = [None] * E
@@ -607,25 +1034,28 @@ def build_moe_decode_template(model, params, batch: int) -> ProgramTemplate:
         for e in range(E):
             wg, wu, wd = sliced[e]
             stages.append(GemmStage(
-                "expert_gate", (cfg.name, pid, l, "w_gate", e),
+                "expert_gate",
+                weight_key(cfg.name, pid, "w_gate", layer=l, expert=e),
                 lambda w=wg: w,
                 lambda env, e=e: env["moe_buf"][0, e],
                 lambda env, out, e=e: env.__setitem__(("moe_gate", e), out),
                 shape=GemmShape(m=C, n=cfg.d_ff, k=d)))
             stages.append(GemmStage(
-                "expert_up", (cfg.name, pid, l, "w_up", e),
+                "expert_up",
+                weight_key(cfg.name, pid, "w_up", layer=l, expert=e),
                 lambda w=wu: w,
                 lambda env, e=e: env["moe_buf"][0, e],
                 lambda env, out, e=e: env.__setitem__(("moe_up", e), out),
                 shape=GemmShape(m=C, n=cfg.d_ff, k=d)))
 
             def act(env, e=e):
-                env[("moe_act", e)] = jax.nn.silu(env.pop(("moe_gate", e))) \
-                    * env.pop(("moe_up", e))
+                env[("moe_act", e)] = _silu_mul(env.pop(("moe_gate", e)),
+                                                env.pop(("moe_up", e)))
 
             glue(act)
             stages.append(GemmStage(
-                "expert_down", (cfg.name, pid, l, "w_down", e),
+                "expert_down",
+                weight_key(cfg.name, pid, "w_down", layer=l, expert=e),
                 lambda w=wd: w,
                 lambda env, e=e: env[("moe_act", e)],
                 lambda env, out, e=e: env["moe_down"].__setitem__(e, out),
@@ -633,10 +1063,8 @@ def build_moe_decode_template(model, params, batch: int) -> ProgramTemplate:
 
         def combine(env):
             out_buf = jnp.stack(env.pop("moe_down"), axis=0)[None]
-            y = jax.vmap(
-                lambda ob, ww, mm: moe_lib.combine_tokens(
-                    ob, ww.reshape(-1), mm, B, d))(
-                out_buf, env.pop("moe_w"), env.pop("moe_meta"))
+            y = _jitted_moe_combine(cfg, B)(out_buf, env.pop("moe_w"),
+                                            env.pop("moe_meta"))
             env.pop("moe_buf")
             env["x"] = env["x"] + y.reshape(B, d).astype(env["h2"].dtype)
 
@@ -645,16 +1073,122 @@ def build_moe_decode_template(model, params, batch: int) -> ProgramTemplate:
     return _build_gqa_decode_template(model, params, batch, ffn_for=ffn_for)
 
 
-def ssm_program_cache_key(model, params, batch: int, cache) -> Tuple:
+def ssm_program_cache_key(model, params, batch: int, cache, *,
+                          stacked: bool = True) -> Tuple:
     """Plan-cache key for an SSM decode template: (model identity, batch,
     dtype, recurrent-cache geometry). Guard discipline as for dense."""
     cc = cache["layers"]["conv"]
     return ("ssm-decode", model.cfg.name, id(model), batch,
             str(params["embed"].dtype), str(cc.dtype), tuple(cc.shape),
-            tuple(cache["layers"]["h"].shape))
+            tuple(cache["layers"]["h"].shape),
+            ("stacked", bool(stacked), model.cfg.num_layers))
 
 
-def build_ssm_decode_template(model, params, batch: int) -> ProgramTemplate:
+def _build_stacked_ssm_decode_template(model, params, batch: int
+                                       ) -> ProgramTemplate:
+    """Stacked counterpart of the per-layer SSM builder: the whole
+    attention-free stack is ONE homogeneous sub-stack, so a single scanned
+    body stage declares the stacked in/out projections and runs the
+    selective-scan recurrence (``ssm_lib.decode_core`` — the same single
+    copy of the math) inside the scan body."""
+    cfg: ModelConfig = model.cfg
+    from repro.models import ssm as ssm_lib
+    scfg = cfg.ssm
+    B, d = batch, cfg.d_model
+    d_inner = scfg.expand * d
+    n_in = 2 * d_inner + 2 * scfg.d_state + scfg.num_heads(d)
+    eps = cfg.norm_eps
+    blocks = params["blocks"]
+    mamba = blocks["mamba"]
+    pid = id(params)
+    L = cfg.num_layers
+    lo, hi = 0, L
+    stages: List[Stage] = []
+    _emit_decode_embed(cfg, params, stages)
+
+    def reset_layers(env):
+        env["new_layers"] = {"conv": [], "h": []}
+
+    stages.append(GlueStage(reset_layers))
+    operands = [
+        StackedOperand(
+            "ssm_in_proj", weight_key(cfg.name, pid, "in_proj",
+                                      stack=(lo, hi)),
+            GemmShape(m=B, n=n_in, k=d, layers=L),
+            lambda: mamba["in_proj"], (mamba["in_proj"],)),
+        StackedOperand(
+            "ssm_out_proj", weight_key(cfg.name, pid, "out_proj",
+                                       stack=(lo, hi)),
+            GemmShape(m=B, n=d, k=d_inner, layers=L),
+            lambda: mamba["out_proj"], (mamba["out_proj"],)),
+    ]
+    # decode_core reads only the conv/dt/A/D/norm leaves; the projections
+    # are the declared stacked operands above
+    mamba_rest = {k: v for k, v in mamba.items()
+                  if k not in ("in_proj", "out_proj")}
+    ln1s = blocks["ln1"]
+    jits: Dict[Tuple, Callable] = {}
+
+    def make_scan(bm: int, bn: int, bk: int, interpret: bool):
+        def gemm(a, w, n):
+            return _scan_gemm(a, w, n, bm=bm, bn=bn, bk=bk,
+                              interpret=interpret)
+
+        # per-layer params enter as jit ARGUMENTS (xs), not closures — XLA
+        # codegens embedded constants differently in the last ulp than
+        # traced arguments, which would break bit-identity with the
+        # per-layer oracle's jitted decode_core glue
+        def scan_fn(x, conv_full, h_full, w, aux):
+            def body(carry, per):
+                hh = rmsnorm(carry, per["ln1"], eps)
+                zxbcdt = gemm(hh, per["w"]["ssm_in_proj"], n_in)
+                y, new_c = ssm_lib.decode_core(
+                    per["mamba"], zxbcdt,
+                    {"conv": per["conv"], "h": per["h"]}, scfg, d)
+                out = gemm(y, per["w"]["ssm_out_proj"], d)
+                return carry + out, (new_c["conv"], new_c["h"])
+
+            xs = dict(aux, conv=conv_full, h=h_full, w=w)
+            return jax.lax.scan(body, x, xs)
+
+        return scan_fn
+
+    aux = {"ln1": ln1s, "mamba": mamba_rest}
+
+    def run(env, padded, ex):
+        key = (ex.bm, ex.bn, ex.bk, ex.interpret)
+        fn = jits.get(key)
+        if fn is None:
+            fn = jits[key] = jax.jit(make_scan(*key))
+        cache = env["cache"]
+        x, (conv_new, h_new) = fn(env["x"], cache["layers"]["conv"],
+                                  cache["layers"]["h"], padded, aux)
+        env["x"] = x
+        env["new_layers"]["conv"].append(conv_new)
+        env["new_layers"]["h"].append(h_new)
+
+    stages.append(StackedGemmStage(
+        tag=f"body_{lo}_{hi}",
+        weight_key=weight_key(cfg.name, pid, "body", stack=(lo, hi)),
+        operands=operands, layers=L, run=run))
+    _emit_final_logits(cfg, params, stages, m_rows=B)
+
+    def finish(env):
+        cache = env["cache"]
+        env["cache"] = {
+            "pos": cache["pos"] + 1,
+            "layers": {
+                "conv": jnp.concatenate(env["new_layers"]["conv"], axis=0),
+                "h": jnp.concatenate(env["new_layers"]["h"], axis=0),
+            },
+        }
+
+    stages.append(GlueStage(finish))
+    return ProgramTemplate(stages=stages, batch=B, model_name=cfg.name)
+
+
+def build_ssm_decode_template(model, params, batch: int, *,
+                              stacked: bool = True) -> ProgramTemplate:
     """Compile the decode step of an attention-free SSM (Mamba-2/SSD) model
     into a ProgramTemplate. Equivalent to ``Model.decode_step`` for
     arch_type 'ssm': per layer, the in projection ([B, d] → z/xBC/dt) and
@@ -667,6 +1201,8 @@ def build_ssm_decode_template(model, params, batch: int) -> ProgramTemplate:
     """
     cfg: ModelConfig = model.cfg
     assert cfg.arch_type == "ssm" and cfg.has_ssm, cfg.arch_type
+    if stacked:
+        return _build_stacked_ssm_decode_template(model, params, batch)
     from repro.models import ssm as ssm_lib
     scfg = cfg.ssm
     B, d = batch, cfg.d_model
@@ -693,7 +1229,7 @@ def build_ssm_decode_template(model, params, batch: int) -> ProgramTemplate:
 
         glue(pre)
         stages.append(GemmStage(
-            "ssm_in_proj", (cfg.name, pid, l, "in_proj"),
+            "ssm_in_proj", weight_key(cfg.name, pid, "in_proj", layer=l),
             lambda lp=lp: lp["mamba"]["in_proj"],
             lambda env: env["h"],
             lambda env, out: env.__setitem__("zxbcdt", out),
@@ -701,16 +1237,16 @@ def build_ssm_decode_template(model, params, batch: int) -> ProgramTemplate:
 
         def scan(env, lp=lp, l=l):
             layers = env["cache"]["layers"]
-            y, new_c = ssm_lib.decode_core(
+            y, new_c = _jitted_ssm_core(cfg)(
                 lp["mamba"], env.pop("zxbcdt"),
-                {"conv": layers["conv"][l], "h": layers["h"][l]}, scfg, d)
+                layers["conv"][l], layers["h"][l])
             env["new_layers"]["conv"].append(new_c["conv"])
             env["new_layers"]["h"].append(new_c["h"])
             env["ssm_y"] = y
 
         glue(scan)
         stages.append(GemmStage(
-            "ssm_out_proj", (cfg.name, pid, l, "out_proj"),
+            "ssm_out_proj", weight_key(cfg.name, pid, "out_proj", layer=l),
             lambda lp=lp: lp["mamba"]["out_proj"],
             lambda env: env["ssm_y"],
             lambda env, out: env.__setitem__("x", env["x"] + out),
@@ -749,18 +1285,132 @@ def prefill_bucket(prompt_len: int, minimum: int = 8) -> int:
     return max(minimum, 1 << (prompt_len - 1).bit_length())
 
 
-def prefill_program_cache_key(model, params, seq_len: int, cache) -> Tuple:
+def _causal_prefill_attend(cfg: ModelConfig, Sp: int, q_flat, k_flat,
+                           v_flat, positions, is_global: bool, out_dtype
+                           ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """One layer of causal prompt attention: the PURE math shared verbatim
+    by the per-layer prefill glue and the stacked scan body. Returns
+    (attn_out [Sp, H·hd], k [1, Hkv, Sp, hd] rope'd, v [1, Hkv, Sp, hd]
+    raw) — the k/v pair in decode-cache layout, exactly what
+    transformer._project_kv emits for the analytic path."""
+    hd = cfg.resolved_head_dim
+    q = q_flat.reshape(1, Sp, cfg.num_heads, hd)
+    k = k_flat.reshape(1, Sp, cfg.num_kv_heads, hd)
+    v = v_flat.reshape(1, Sp, cfg.num_kv_heads, hd)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    G = cfg.num_heads // cfg.num_kv_heads
+    qg = q.reshape(1, Sp, cfg.num_kv_heads, G, hd)
+    scores = jnp.einsum("bshgd,bthd->bhgst", qg, k,
+                        preferred_element_type=jnp.float32)
+    scores = scores / jnp.sqrt(jnp.float32(hd))
+    idx = jnp.arange(Sp)
+    ok = idx[None, :] <= idx[:, None]
+    if cfg.window_size > 0 and not is_global:
+        ok = ok & (idx[None, :] > (idx[:, None] - cfg.window_size))
+    scores = jnp.where(ok[None, None, None], scores, -2.0e38)
+    p = jax.nn.softmax(scores, axis=-1)
+    o = jnp.einsum("bhgst,bthd->bshgd", p, v.astype(jnp.float32))
+    return (o.reshape(Sp, cfg.num_heads * hd).astype(out_dtype),
+            k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3))
+
+
+def _stacked_prefill_body_stage(model, params, Sp: int, lo: int, hi: int
+                                ) -> StackedGemmStage:
+    """ONE scanned prefill body covering layers [lo, hi): the stacked
+    replacement for the per-layer prompt-pass stages. The scan body replays
+    ``_causal_prefill_attend`` verbatim and stacks each layer's [1, Hkv,
+    Sp, hd] KV pair into a [Lsub, Hkv, Sp, hd] ys chunk — the layout the
+    shared prefill epilogue already concatenates."""
+    cfg: ModelConfig = model.cfg
+    hd = cfg.resolved_head_dim
+    d = cfg.d_model
+    eps = cfg.norm_eps
+    blocks = params["blocks"]
+    pid = id(params)
+    Lsub = hi - lo
+    is_global = bool(cfg.layer_is_global(lo))
+
+    def sop(tag, name, arr, n, k):
+        return StackedOperand(
+            tag, weight_key(cfg.name, pid, name, stack=(lo, hi)),
+            GemmShape(m=Sp, n=n, k=k, layers=Lsub),
+            lambda a=arr: _stack_slice(a, lo, hi), (arr,))
+
+    attn = blocks["attn"]
+    mlp = blocks["mlp"]
+    operands = [
+        sop("attn_wq", "wq", attn["wq"], cfg.num_heads * hd, d),
+        sop("attn_wk", "wk", attn["wk"], cfg.num_kv_heads * hd, d),
+        sop("attn_wv", "wv", attn["wv"], cfg.num_kv_heads * hd, d),
+        sop("attn_wo", "wo", attn["wo"], d, cfg.num_heads * hd),
+        sop("ffn_gate", "w_gate", mlp["w_gate"], cfg.d_ff, d),
+        sop("ffn_up", "w_up", mlp["w_up"], cfg.d_ff, d),
+        sop("ffn_down", "w_down", mlp["w_down"], d, cfg.d_ff),
+    ]
+    ln1s = _stack_slice(blocks["ln1"], lo, hi)
+    ln2s = _stack_slice(blocks["ln2"], lo, hi)
+    jits: Dict[Tuple, Callable] = {}
+
+    def make_scan(bm: int, bn: int, bk: int, interpret: bool):
+        def gemm(a, w, n):
+            return _scan_gemm(a, w, n, bm=bm, bn=bn, bk=bk,
+                              interpret=interpret)
+
+        # per-layer norms enter as jit arguments (see the decode body note)
+        def scan_fn(x, positions, w, aux):
+            def body(carry, per):
+                wl = per["w"]
+                h = rmsnorm(carry, per["ln1"], eps)
+                q = gemm(h, wl["attn_wq"], cfg.num_heads * hd)
+                k = gemm(h, wl["attn_wk"], cfg.num_kv_heads * hd)
+                v = gemm(h, wl["attn_wv"], cfg.num_kv_heads * hd)
+                attn_out, k_t, v_t = _causal_prefill_attend(
+                    cfg, Sp, q, k, v, positions, is_global, h.dtype)
+                x2 = carry + gemm(attn_out, wl["attn_wo"], d)
+                h2 = rmsnorm(x2, per["ln2"], eps)
+                gate = gemm(h2, wl["ffn_gate"], cfg.d_ff)
+                up = gemm(h2, wl["ffn_up"], cfg.d_ff)
+                x3 = x2 + gemm(jax.nn.silu(gate) * up, wl["ffn_down"], d)
+                return x3, (k_t[0], v_t[0])
+
+            xs = dict(aux, w=w)
+            return jax.lax.scan(body, x, xs)
+
+        return scan_fn
+
+    aux = {"ln1": ln1s, "ln2": ln2s}
+
+    def run(env, padded, ex):
+        key = (ex.bm, ex.bn, ex.bk, ex.interpret)
+        fn = jits.get(key)
+        if fn is None:
+            fn = jits[key] = jax.jit(make_scan(*key))
+        x, (k_ys, v_ys) = fn(env["x"], env["positions"], padded, aux)
+        env["x"] = x
+        env["new_layers"]["k"].append(k_ys)
+        env["new_layers"]["v"].append(v_ys)
+
+    return StackedGemmStage(
+        tag=f"body_{lo}_{hi}",
+        weight_key=weight_key(cfg.name, pid, "body", stack=(lo, hi)),
+        operands=operands, layers=Lsub, run=run)
+
+
+def prefill_program_cache_key(model, params, seq_len: int, cache, *,
+                              stacked: bool = True) -> Tuple:
     """Plan-cache key for a dense prefill template: (model identity, padded
     prompt bucket, dtype, cache geometry). Same guard discipline as
     ``dense_program_cache_key`` — params identity is caught by the lookup
     site's ``guard=(model, params)``, never baked into the key."""
     kc = cache["layers"]["k"]
     return ("dense-prefill", model.cfg.name, id(model), seq_len,
-            str(params["embed"].dtype), str(kc.dtype), tuple(kc.shape))
+            str(params["embed"].dtype), str(kc.dtype), tuple(kc.shape),
+            ("stacked", bool(stacked), model.cfg.num_layers))
 
 
-def build_dense_prefill_template(model, params, seq_len: int
-                                 ) -> ProgramTemplate:
+def build_dense_prefill_template(model, params, seq_len: int, *,
+                                 stacked: bool = True) -> ProgramTemplate:
     """Compile the PROMPT pass of a dense GQA model into a ProgramTemplate.
 
     Every projection GEMM is declared to the JIT with m = ``seq_len`` (the
@@ -799,37 +1449,25 @@ def build_dense_prefill_template(model, params, seq_len: int
 
     glue(embed)
 
-    def attend_for(l, lp, is_global):
-        # causal self-attention over the whole (padded) prompt
-        def attend(env, is_global=is_global):
-            q = env["wq"].reshape(1, Sp, cfg.num_heads, hd)
-            k = env["wk"].reshape(1, Sp, cfg.num_kv_heads, hd)
-            v = env["wv"].reshape(1, Sp, cfg.num_kv_heads, hd)
-            pos = env["positions"]
-            q = apply_rope(q, pos, cfg.rope_theta)
-            k = apply_rope(k, pos, cfg.rope_theta)
-            # decode-cache layout [Hkv, Sp, hd]: k rope'd, v raw — exactly
-            # what transformer._project_kv emits for the analytic path
-            env["new_layers"]["k"].append(k.transpose(0, 2, 1, 3))
-            env["new_layers"]["v"].append(v.transpose(0, 2, 1, 3))
-            G = cfg.num_heads // cfg.num_kv_heads
-            qg = q.reshape(1, Sp, cfg.num_kv_heads, G, hd)
-            scores = jnp.einsum("bshgd,bthd->bhgst", qg, k,
-                                preferred_element_type=jnp.float32)
-            scores = scores / jnp.sqrt(jnp.float32(hd))
-            idx = jnp.arange(Sp)
-            ok = idx[None, :] <= idx[:, None]
-            if cfg.window_size > 0 and not is_global:
-                ok = ok & (idx[None, :] > (idx[:, None] - cfg.window_size))
-            scores = jnp.where(ok[None, None, None], scores, -2.0e38)
-            p = jax.nn.softmax(scores, axis=-1)
-            o = jnp.einsum("bhgst,bthd->bshgd", p, v.astype(jnp.float32))
-            env["attn_out"] = o.reshape(Sp, cfg.num_heads * hd).astype(
-                env["h"].dtype)
+    if stacked:
+        for lo, hi in partition_layers(cfg.global_layer_flags()):
+            stages.append(_stacked_prefill_body_stage(model, params, Sp,
+                                                      lo, hi))
+    else:
+        def attend_for(l, lp, is_global):
+            # causal self-attention over the whole (padded) prompt
+            def attend(env, is_global=is_global):
+                attn_out, k_t, v_t = _jitted_prefill_attend(
+                    cfg, Sp, is_global, env["h"].dtype)(
+                    env["wq"], env["wk"], env["wv"], env["positions"])
+                env["new_layers"]["k"].append(k_t)
+                env["new_layers"]["v"].append(v_t)
+                env["attn_out"] = attn_out
 
-        return attend
+            return attend
 
-    _emit_dense_body(cfg, params, stages, m_rows=Sp, attend_for=attend_for)
+        _emit_dense_body(cfg, params, stages, m_rows=Sp,
+                         attend_for=attend_for)
 
     def final_norm(env):
         # only the last REAL position is unembedded (Model.prefill returns
@@ -1059,7 +1697,10 @@ class JitSession:
             return
         self._push_op(prog, st)
 
-    def _push_op(self, prog: KernelProgram, st: GemmStage) -> None:
+    def _push_op(self, prog: KernelProgram, st: Stage) -> None:
+        if isinstance(st, StackedGemmStage):
+            self._push_stacked_op(prog, st)
+            return
         a = st.input_fn(prog.env)
         w = st.weight_fn()
         # aspect boundary derived from the JIT's m-tile (kernelspec owns
@@ -1085,6 +1726,84 @@ class JitSession:
         self.live[op.op_id] = (prog, st)
         self.sched.push([op])
 
+    def _push_stacked_op(self, prog: KernelProgram,
+                         st: StackedGemmStage) -> None:
+        """Declare one layer-stacked body stage as a single KernelOp.
+
+        ``op.shape`` carries the DOMINANT operand (largest total weight
+        volume) for EDF/aspect bookkeeping; the full per-operand signature
+        rides on ``op.stack`` and drives coalescing (clustering.
+        coalesce_key) and the cost charge (L sequential tile-waves per
+        operand)."""
+        dom = max((od.shape for od in st.operands),
+                  key=lambda s: s.layers * s.n * s.k)
+        op = make_op(prog.stream_id, op_aspect(dom.m, self.jit.bm), dom,
+                     arrival_t=prog.arrival_t,
+                     deadline_t=prog.effective_deadline,
+                     seq_index=prog.pc, tag=st.tag,
+                     model_id=st.weight_key[0],
+                     op_kind=prog.kind)
+        op.stack = tuple((od.tag, od.shape) for od in st.operands)
+        # no eager activation/weight binding — the stacked operands are
+        # materialized at dispatch time (_run_stacked); the key slot keeps
+        # shared-operand detection uniform with plain ops
+        op.payload = (None, None, st.weight_key)
+        op.req_deadlines = prog.req_deadlines
+        if math.isfinite(op.deadline_t):
+            op.latest_start_t = op.deadline_t \
+                - prog.remaining_gemm_time(self.jit.cost, prog.pc)
+        self.live[op.op_id] = (prog, st)
+        self.sched.push([op])
+
+    def _run_stacked(self, ops, completed) -> None:
+        """Dispatch a coalesced group of layer-stacked body ops: pack each
+        op's stacked weight operands through the executor's persistent
+        cache, then run the scanned bodies back-to-back."""
+        ex = self.jit.executor
+        for op in ops:
+            prog, st = self.live.pop(op.op_id)
+            padded = {}
+            if not ex.enabled:
+                # eager ablation (executor.enabled=False): pad each stacked
+                # operand fresh — same envelope, same bits — but through
+                # neither the persistent cache nor DispatchStats
+                for od in st.operands:
+                    w = od.weight_fn()
+                    K = envelope_bucket(int(od.shape.k))
+                    N = envelope_bucket(int(od.shape.n))
+                    pad = [(0, 0)] * (w.ndim - 2) + \
+                        [(0, K - int(w.shape[-2])), (0, N - int(w.shape[-1]))]
+                    padded[od.tag] = jnp.pad(w, pad)
+            else:
+                h0, m0 = ex.stats.weight_hits, ex.stats.weight_misses
+                for od in st.operands:
+                    # params-free group identity: a hot-swap (new params id
+                    # in the weight key) changes the key within the same
+                    # group, so the cache drops the superseded entry
+                    group = (op.stream_id, od.weight_key[0]) \
+                        + od.weight_key[2:]
+                    padded[od.tag] = ex.stacked_operand(
+                        od.weight_key, od.shape.k, od.shape.n,
+                        od.shape.layers, od.weight_fn, od.guard, group=group)
+                # collapse the per-operand cache accesses into ONE hit/miss
+                # event per dispatch (miss iff any operand had to repack)
+                # so the DispatchStats invariant hits + misses == dispatches
+                # holds across plain and stacked dispatch alike
+                missed = ex.stats.weight_misses - m0
+                ex.stats.weight_hits, ex.stats.weight_misses = h0, m0
+                if missed:
+                    ex.stats.weight_misses += 1
+                else:
+                    ex.stats.weight_hits += 1
+                ex.stats.dispatches += 1
+            st.run(prog.env, padded, ex)
+            prog.pc += 1
+            nxt = prog.advance_glue()
+            if nxt is None:
+                completed.append(prog)
+            else:
+                self._push_op(prog, nxt)
+
     def tick(self, now: float) -> TickEvent:
         """Execute one scheduler decision at virtual time ``now``."""
         self._sync_cache_stats()
@@ -1103,9 +1822,22 @@ class JitSession:
         # operand identity lives with the clustering layer: a group whose
         # ops all carry ONE weight key loads the weights once
         shared = shared_weight_key(plan.ops) is not None
-        # the jitted dispatch fast path (core/dispatch.py): persistent
-        # packed weights + bucketed envelopes + compiled pack/kernel/unpack
-        outs = self.jit.executor.execute(plan.ops, shared_operand=shared)
+        stacked = plan.ops[0].stack is not None
+        if stacked:
+            # coalesce_key keeps stacked and plain ops in disjoint buckets
+            assert all(op.stack is not None for op in plan.ops)
+            serial_shapes = [s for op in plan.ops for _, s in op.stack]
+            outs = None
+            t = plan.est_time_s
+        else:
+            # the jitted dispatch fast path (core/dispatch.py): persistent
+            # packed weights + bucketed envelopes + compiled
+            # pack/kernel/unpack
+            outs = self.jit.executor.execute(plan.ops,
+                                             shared_operand=shared)
+            serial_shapes = [o.shape for o in plan.ops]
+            t = self.jit.cost.coalesced_time(serial_shapes, plan.block,
+                                             shared_operand=shared)
         stats = self.stats
         stats.superkernels += 1
         stats.ops_executed += len(plan.ops)
@@ -1117,20 +1849,21 @@ class JitSession:
                 stats.prefill_coalesced += 1
             if any(is_expert_op(op) for op in plan.ops):
                 stats.expert_coalesced += 1
-        t = self.jit.cost.coalesced_time([o.shape for o in plan.ops],
-                                         plan.block, shared_operand=shared)
         stats.modeled_time_s += t
         stats.modeled_serial_time_s += self.jit.cost.time_multiplexed(
-            [o.shape for o in plan.ops], plan.block)
-        for op, out in zip(plan.ops, outs):
-            prog, st = self.live.pop(op.op_id)
-            st.output_fn(prog.env, out)
-            prog.pc += 1
-            nxt = prog.advance_glue()
-            if nxt is None:
-                completed.append(prog)
-            else:
-                self._push_op(prog, nxt)
+            serial_shapes, plan.block)
+        if stacked:
+            self._run_stacked(plan.ops, completed)
+        else:
+            for op, out in zip(plan.ops, outs):
+                prog, st = self.live.pop(op.op_id)
+                st.output_fn(prog.env, out)
+                prog.pc += 1
+                nxt = prog.advance_glue()
+                if nxt is None:
+                    completed.append(prog)
+                else:
+                    self._push_op(prog, nxt)
         # re-sync after the dispatch so a session that ends on this tick
         # still reports the executor/plan-cache work it just did
         self._sync_cache_stats()

@@ -65,6 +65,14 @@ class KernelOp:
     # length). Purely descriptive for scheduling stats — coalescing
     # eligibility is (n, k, dtype) only.
     op_kind: str = "decode"
+    # layer-stacked op (core/jit.py StackedGemmStage): the ordered
+    # (operand tag, per-layer GemmShape-with-layers) pairs of ONE scanned
+    # layer body covering a homogeneous sub-stack of layers. None for
+    # ordinary single-GEMM ops. ``shape`` then holds the DOMINANT operand's
+    # shape (for EDF/aspect bookkeeping); coalescing uses the full stack
+    # signature (clustering.coalesce_key).
+    stack: Optional[Tuple] = dataclasses.field(default=None, repr=False,
+                                               compare=False)
 
     @property
     def slack(self) -> float:

@@ -14,6 +14,7 @@ from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 Params = Dict[str, Any]
 
@@ -53,19 +54,62 @@ def init_rmsnorm(d: int, dtype) -> jax.Array:
 # ---------------------------------------------------------------------------
 
 def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    # computed on HOST (numpy) so the table is one literal constant: a
+    # device-side ``theta ** x`` evaluates through the runtime pow kernel
+    # eagerly but through XLA's constant folder under jit, and the two
+    # disagree in the last ulp — which would break bit-identity between
+    # eager per-layer glue and jitted scan-over-layers bodies
     half = head_dim // 2
-    return 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    return jnp.asarray(
+        (1.0 / (theta ** (np.arange(half, dtype=np.float64) / half))
+         ).astype(np.float32))
+
+
+# Host-precomputed rope cos/sin tables, one per (head_dim, theta). The trig
+# itself must NOT be evaluated on device: XLA's standalone cos/sin kernels
+# and its fused-loop vectorized versions disagree in the last ulp, so the
+# same ``cos(pos * freq)`` computes different bits inside a jitted
+# scan-over-layers body than in eager per-layer glue. A host table + device
+# gather is bit-exact in every execution regime. 8192 positions bounds every
+# cache/prefill geometry this repo serves (gather clips beyond it).
+_ROPE_TABLE_POSITIONS = 8192
+_ROPE_TRIG: Dict[Any, Any] = {}
+
+
+def _rope_trig_tables(head_dim: int, theta: float):
+    # cache NUMPY arrays only — materializing device arrays here would leak
+    # tracers when the first call happens inside a jit/scan trace; the
+    # use-site jnp.asarray embeds them as constants under trace and
+    # transfers on the eager path
+    key = (head_dim, float(theta))
+    tab = _ROPE_TRIG.get(key)
+    if tab is None:
+        half = head_dim // 2
+        freqs = 1.0 / (theta ** (np.arange(half, dtype=np.float64) / half))
+        ang = np.arange(_ROPE_TABLE_POSITIONS,
+                        dtype=np.float64)[:, None] * freqs
+        tab = (np.cos(ang).astype(np.float32),
+               np.sin(ang).astype(np.float32))
+        _ROPE_TRIG[key] = tab
+    return tab
 
 
 def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
-    """x: [..., seq, heads, head_dim]; positions: broadcastable to [..., seq]."""
+    """x: [..., seq, heads, head_dim]; positions: broadcastable to [..., seq].
+
+    cos/sin come from a host-precomputed per-position table, so the trig is
+    a bit-exact gather in every execution regime — part of the bit-identity
+    contract between the per-layer and scan-over-layers template regimes
+    (the remaining fma-contraction hazard in the rotation is handled by the
+    JIT running per-layer glue through ``jax.jit``, core/jit.py)."""
     head_dim = x.shape[-1]
-    freqs = rope_frequencies(head_dim, theta)  # [half]
-    angles = positions[..., None].astype(jnp.float32) * freqs  # [..., seq, half]
-    cos = jnp.cos(angles)[..., None, :]  # [..., seq, 1, half]
-    sin = jnp.sin(angles)[..., None, :]
+    cos_t, sin_t = _rope_trig_tables(head_dim, theta)
+    idx = positions.astype(jnp.int32)
+    cos = jnp.asarray(cos_t)[idx][..., None, :]  # [..., seq, 1, half]
+    sin = jnp.asarray(sin_t)[idx][..., None, :]
     x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
-    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin],
+                          axis=-1)
     return out.astype(x.dtype)
 
 

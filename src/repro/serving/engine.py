@@ -224,10 +224,19 @@ class ServingEngine:
                  prefill_declare_min: int = 16,
                  predict_arrivals: bool = False,
                  arrival_alpha: float = 0.2,
-                 weight_budget_bytes: Optional[int] = 1 << 30):
+                 weight_budget_bytes: Optional[int] = 1 << 30,
+                 stacked_layers: bool = True):
         assert mode in ("time", "batched", "vliw")
         self.tenants = {t.name: t for t in tenants}
         self.mode = mode
+        # stacked_layers=True (default) compiles tenants to layer-stacked
+        # templates (one scanned body per homogeneous sub-stack; build and
+        # trace size O(1) in depth). False keeps per-layer emission — the
+        # bit-identity oracle. The analytic charges below (_ops_time etc.)
+        # are regime-independent: the stacked cost model charges a stacked
+        # op as L sequential tile-waves, the same total the per-layer path
+        # accumulates stage by stage.
+        self.stacked_layers = stacked_layers
         # vliw mode compiles dense tenants' prompt passes to KernelPrograms
         # (prefill GEMMs enter the live op pool and coalesce across
         # tenants); declared_prefill=False keeps the analytic serialized
@@ -456,8 +465,10 @@ class ServingEngine:
         prompt = self._make_prompt(t, req, rng)
         padded = jnp.pad(prompt, ((0, 0), (0, bucket - s)))
         template = self.jit.plan_cache.get_or_build(
-            prefill_program_cache_key(t.model, t.params, bucket, t.cache),
-            lambda: build_dense_prefill_template(t.model, t.params, bucket),
+            prefill_program_cache_key(t.model, t.params, bucket, t.cache,
+                                      stacked=self.stacked_layers),
+            lambda: build_dense_prefill_template(
+                t.model, t.params, bucket, stacked=self.stacked_layers),
             guard=(t.model, t.params),
             group=("tenant-prefill", t.name, bucket))
         final = req.arrival_t + req.slo_s
@@ -534,18 +545,22 @@ class ServingEngine:
             min(finals) if finals else math.inf
         batch = int(t.slot_tok.shape[0])
         arch = t.cfg.arch_type
+        stacked = self.stacked_layers
         if arch == "moe":
-            key = moe_program_cache_key(t.model, t.params, batch, t.cache)
+            key = moe_program_cache_key(t.model, t.params, batch, t.cache,
+                                        stacked=stacked)
             build = lambda: build_moe_decode_template(  # noqa: E731
-                t.model, t.params, batch)
+                t.model, t.params, batch, stacked=stacked)
         elif arch == "ssm":
-            key = ssm_program_cache_key(t.model, t.params, batch, t.cache)
+            key = ssm_program_cache_key(t.model, t.params, batch, t.cache,
+                                        stacked=stacked)
             build = lambda: build_ssm_decode_template(  # noqa: E731
-                t.model, t.params, batch)
+                t.model, t.params, batch, stacked=stacked)
         else:
-            key = dense_program_cache_key(t.model, t.params, batch, t.cache)
+            key = dense_program_cache_key(t.model, t.params, batch, t.cache,
+                                          stacked=stacked)
             build = lambda: build_dense_decode_template(  # noqa: E731
-                t.model, t.params, batch)
+                t.model, t.params, batch, stacked=stacked)
         template = self.jit.plan_cache.get_or_build(
             key, build, guard=(t.model, t.params), group=("tenant", t.name))
         return template.bind(

@@ -16,7 +16,7 @@ from _hypothesis_compat import given, settings, st
 
 from repro.core.costmodel import GemmShape
 from repro.core.dispatch import SuperkernelExecutor, _pow2, _tile_bucket
-from repro.core.jit import prefill_bucket
+from repro.core.jit import partition_layers, prefill_bucket
 from repro.core.kernelspec import make_op
 from repro.core.plancache import PlanCache
 from repro.kernels.ops import envelope_bucket
@@ -135,3 +135,44 @@ def test_dispatch_cache_key_pack_order_insensitive(perm_index):
     for pos, i in enumerate(perm):             # outputs follow CALL order
         np.testing.assert_array_equal(np.asarray(permuted[pos]),
                                       np.asarray(base[i]))
+
+
+# ---------------------------------------------------------------------------
+# partition_layers: the stacked templates' sub-stack partitioner
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=60, deadline=None)
+@given(st.lists(st.booleans(), min_size=0, max_size=12))
+def test_partition_layers_covers_exactly_once_in_order(flags):
+    """The spans tile ``range(len(flags))`` exactly once, in order, as
+    half-open intervals — a layer dropped from (or repeated in) the scan
+    would silently corrupt every tenant of that depth."""
+    runs = partition_layers(flags)
+    assert all(lo < hi for lo, hi in runs)
+    covered = [i for lo, hi in runs for i in range(lo, hi)]
+    assert covered == list(range(len(flags)))
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.lists(st.booleans(), min_size=1, max_size=12))
+def test_partition_layers_runs_homogeneous_and_maximal(flags):
+    """Each span is flag-homogeneous (the flag must be static inside one
+    scan body) and maximal (adjacent spans alternate — no needless split
+    of a homogeneous stack into extra dispatches)."""
+    runs = partition_layers(flags)
+    for lo, hi in runs:
+        assert len({flags[i] for i in range(lo, hi)}) == 1
+    for (a_lo, _), (b_lo, _) in zip(runs, runs[1:]):
+        assert flags[a_lo] != flags[b_lo]
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.lists(st.booleans(), min_size=0, max_size=12))
+def test_partition_layers_round_trips(flags):
+    """The global/local alternation reconstructs exactly from the spans."""
+    runs = partition_layers(flags)
+    rebuilt = [flags[lo] for lo, hi in runs for _ in range(lo, hi)]
+    assert rebuilt == list(flags)
+    # homogeneous stacks collapse to ONE span (the O(1)-in-depth case)
+    if len(set(flags)) <= 1:
+        assert len(runs) == (1 if flags else 0)
