@@ -128,7 +128,9 @@ def _tokens(rep):
 
 def bench_serving_identity(max_new_tokens: int):
     """End-to-end gate: the cached dispatch path must emit bit-identical
-    greedy tokens to the eager reference on a real two-tenant serve."""
+    greedy tokens to the eager reference on a real two-tenant serve. Both
+    runs go through the per-tick schedule certifier (certify=True) — every
+    OoO reordering on this path must be provably hazard-free."""
     def mk(arch, seed):
         cfg = smoke_config(arch)
         mdl = Model(cfg, param_dtype=jnp.float32)
@@ -142,20 +144,26 @@ def bench_serving_identity(max_new_tokens: int):
     for name, enabled in (("eager", False), ("cached", True)):
         eng = ServingEngine(
             [Tenant("a", m1, p1, cache_len=32, max_batch=2),
-             Tenant("b", m2, p2, cache_len=32, max_batch=2)], mode="vliw")
+             Tenant("b", m2, p2, cache_len=32, max_batch=2)], mode="vliw",
+            certify=True)
         eng.jit.executor.enabled = enabled
         reps[name] = eng.run(copy.deepcopy(trace))
-    d = reps["cached"].jit.dispatch
+    hit_rate = reps["cached"].jit.dispatch.weight_hit_rate
+    jit = reps["cached"].jit.merge(reps["eager"].jit)
     emit("dispatch/serving_identity",
          reps["cached"].wall_time_s * 1e6,
          f"tokens_identical={_tokens(reps['eager']) == _tokens(reps['cached'])}"
-         f";weight_hit_rate={d.weight_hit_rate:.3f}")
-    return _tokens(reps["eager"]) == _tokens(reps["cached"])
+         f";weight_hit_rate={hit_rate:.3f}"
+         f";hazard_checks={jit.hazard_checks}"
+         f";hazard_violations={jit.hazard_violations}")
+    return (_tokens(reps["eager"]) == _tokens(reps["cached"]),
+            jit.hazard_checks, jit.hazard_violations)
 
 
-def check(results, tokens_ok: bool, steps: int, *,
+def check(results, serving, steps: int, *,
           min_speedup: float) -> bool:
     ok = True
+    tokens_ok, hazard_checks, hazard_violations = serving
     speedup, d, retraces = results["stable"]
     if speedup < min_speedup:
         print(f"FAIL: cached dispatch not >= {min_speedup:.1f}x faster than "
@@ -175,11 +183,21 @@ def check(results, tokens_ok: bool, steps: int, *,
         print("FAIL: cached dispatch changed greedy tokens vs the eager "
               "reference", file=sys.stderr)
         ok = False
+    # the serving runs went through the per-tick certifier: a clean pass
+    # means zero violations AND a nonzero number of evaluated predicates
+    # (a certifier that checked nothing must not read as a pass)
+    if hazard_violations != 0 or hazard_checks <= 0:
+        print(f"FAIL: schedule certification on the serving runs: "
+              f"{hazard_violations} violation(s) over {hazard_checks} "
+              f"check(s)", file=sys.stderr)
+        ok = False
     write_summary("dispatch", {
         "ok": ok, "steps": steps, "stable_speedup": speedup,
         "weight_hit_rate": d.weight_hit_rate,
         "bytes_not_copied": d.bytes_not_copied,
         "post_warmup_retraces": retraces, "tokens_identical": tokens_ok,
+        "hazard_checks": hazard_checks,
+        "hazard_violations": hazard_violations,
     })
     return ok
 
@@ -188,8 +206,8 @@ def run() -> None:
     """Entry point for the benchmarks/run.py harness (full acceptance)."""
     results = bench_dispatch(8, steps=16)
     bench_dispatch(8, steps=8, k=512, n=512)       # context row, ungated
-    tokens_ok = bench_serving_identity(3)
-    assert check(results, tokens_ok, 16, min_speedup=3.0), \
+    serving = bench_serving_identity(3)
+    assert check(results, serving, 16, min_speedup=3.0), \
         "dispatch fast-path acceptance failed"
 
 
@@ -209,10 +227,10 @@ def main() -> int:
     results = bench_dispatch(n_tenants, steps)
     if not args.quick:
         bench_dispatch(n_tenants, steps=8, k=512, n=512)  # context, ungated
-    tokens_ok = bench_serving_identity(4 if args.quick else 6)
+    serving = bench_serving_identity(4 if args.quick else 6)
     # --quick (CI) gates on ANY wall-clock speedup so host jitter cannot
     # flake the build; the full run enforces the >= 3x acceptance claim
-    return 0 if check(results, tokens_ok, steps,
+    return 0 if check(results, serving, steps,
                       min_speedup=1.0 if args.quick else 3.0) else 1
 
 

@@ -68,7 +68,10 @@ def bench(max_new_tokens: int, n_per_tenant: int):
                  n for _ in range(n_per_tenant) for n in names)]
     reps = {}
     for mode in ("batched", "vliw"):
-        eng = ServingEngine(_tenants(), mode=mode)
+        # the vliw run goes through the per-tick schedule certifier: the
+        # MoE expert-GEMM coalescing this bench gates on must be provably
+        # hazard-free, not just token-identical
+        eng = ServingEngine(_tenants(), mode=mode, certify=(mode == "vliw"))
         reps[mode] = eng.run(copy.deepcopy(trace))
         extra = ""
         if reps[mode].jit:
@@ -76,7 +79,9 @@ def bench(max_new_tokens: int, n_per_tenant: int):
             extra = (f";expert_coalesced={j.expert_coalesced}"
                      f";nondense_programs={j.nondense_programs}"
                      f";mean_group={j.mean_group:.2f}"
-                     f";superkernels={j.superkernels}")
+                     f";superkernels={j.superkernels}"
+                     f";hazard_checks={j.hazard_checks}"
+                     f";hazard_violations={j.hazard_violations}")
         emit(f"moe_coalescing/{mode}/tenants=4",
              reps[mode].modeled_time_s * 1e6,
              f"tok_s={reps[mode].tokens_per_s:.0f}{extra}")
@@ -99,12 +104,19 @@ def check(reps, *, expected_moe_steps: int) -> bool:
               f"through the JIT (expected >= {expected_moe_steps}) — the "
               "batched-fallback path is back", file=sys.stderr)
         ok = False
+    if jit.hazard_violations != 0 or jit.hazard_checks <= 0:
+        print(f"FAIL: schedule certification on the vliw run: "
+              f"{jit.hazard_violations} violation(s) over "
+              f"{jit.hazard_checks} check(s)", file=sys.stderr)
+        ok = False
     write_summary("moe_coalescing", {
         "ok": ok,
         "expert_coalesced": jit.expert_coalesced,
         "nondense_programs": jit.nondense_programs,
         "mean_group": jit.mean_group,
         "superkernels": jit.superkernels,
+        "hazard_checks": jit.hazard_checks,
+        "hazard_violations": jit.hazard_violations,
         "modeled_time_us_vliw": reps["vliw"].modeled_time_s * 1e6,
         "modeled_time_us_batched": reps["batched"].modeled_time_s * 1e6,
         "tokens_identical":

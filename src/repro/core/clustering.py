@@ -164,6 +164,25 @@ def shared_weight_key(ops: Sequence[KernelOp]):
     return key if all(op_weight_key(op) == key for op in ops[1:]) else None
 
 
+def op_weight_identity(op: KernelOp):
+    """Identity (ids) of the array(s) the op's weight binding resolved to,
+    or None when nothing is bound yet.
+
+    This is what the shared-operand LEGALITY check compares: equal weight
+    *keys* are supposed to imply the identical weight *array* (one load
+    serves the group), and the schedule certifier verifies that
+    implication on every shared dispatch instead of trusting it. Plain ops
+    carry their weight in ``payload[1]``; stacked ops bind lazily, so
+    their identity is the tuple of operand-guard array ids the session
+    attaches in ``payload[1]`` (see JitSession._push_stacked_op)."""
+    if op.payload is None:
+        return None
+    w = op.payload[1]
+    if w is None:
+        return None
+    return tuple(id(a) for a in w) if isinstance(w, tuple) else (id(w),)
+
+
 def is_expert_op(op: KernelOp) -> bool:
     """True for a per-expert MoE FFN GEMM (tag "expert_gate/up/down"),
     or for a stacked layer body that carries expert operands."""

@@ -70,6 +70,7 @@ import jax.numpy as jnp
 
 from repro.core.clustering import matvec_weight_key
 from repro.core.kernelspec import KernelOp
+from repro.core.schedtrace import OperandIdentityHazard
 from repro.core.plancache import PlanCache
 from repro.kernels.coalesced_gemm import coalesced_gemm
 from repro.kernels.coalesced_gemv import coalesced_gemv
@@ -346,6 +347,22 @@ class SuperkernelExecutor:
                                       ops[i].seq_index))
         problems = [ops[i].payload[:2] for i in order]
         wkeys = [ops[i].payload[2] for i in order]
+        if shared_operand:
+            # the shared regime loads ops[0]'s weight ONCE for the whole
+            # group, so equal weight keys must mean the identical array —
+            # a key aliasing two distinct arrays (e.g. a weight_fn that
+            # rebuilds a transpose per template) would silently serve one
+            # tenant another's weights. Fail loudly instead; the schedule
+            # certifier (repro.analysis.certify) makes the same check on
+            # the recorded trace.
+            w0 = problems[0][1]
+            bad = next((i for i, (_, w) in enumerate(problems)
+                        if w is not w0), None)
+            if bad is not None:
+                raise OperandIdentityHazard(
+                    "shared-operand dispatch over non-identical weight "
+                    f"arrays: key {wkeys[0]} vs {wkeys[bad]}",
+                    detail={"keys": (wkeys[0], wkeys[bad])})
         # params-free identity of this dispatch slot, so a hot-swap that
         # renames every weight key (new id(params)) still eagerly drops
         # the superseded packed-weight entry (see _packed_weights)

@@ -105,6 +105,7 @@ admission timing (tests/test_event_loop.py).
 from __future__ import annotations
 
 import dataclasses
+import itertools
 import math
 import weakref
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple, Union
@@ -113,7 +114,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.core.clustering import is_expert_op, shared_weight_key, weight_key
+from repro.core.clustering import (is_expert_op, op_weight_identity,
+                                   op_weight_key, shared_weight_key,
+                                   weight_key)
 from repro.core.coalescer import Coalescer
 from repro.core.costmodel import CostModel, GemmShape, TPUV5E
 from repro.core.dispatch import (DispatchStats, SuperkernelExecutor,
@@ -121,6 +124,8 @@ from repro.core.dispatch import (DispatchStats, SuperkernelExecutor,
 from repro.core.kernelspec import make_op, op_aspect
 from repro.core.plancache import PlanCache, PlanCacheStats
 from repro.core.scheduler import OoOScheduler, SchedulerConfig
+from repro.core.schedtrace import (DispatchRecord, OpRecord, ProgramAdmit,
+                                   ScheduleTrace)
 from repro.kernels.coalesced_gemm import coalesced_gemm
 from repro.models.layers import rmsnorm, apply_rope
 
@@ -142,11 +147,25 @@ class GemmStage:
     # stage without materializing its weight (weight_fn may be non-trivial,
     # e.g. a tied-embedding transpose)
     shape: Optional[GemmShape] = None
+    # declared access sets for static dependence analysis
+    # (repro.analysis.depgraph): the env keys input_fn/output_fn touch —
+    # plus the reserved "cache" / "new_layers" resources for stages that
+    # read or update KV state. None (undeclared) means the analysis must
+    # conservatively assume the stage aliases EVERYTHING; the builders in
+    # this module declare every stage they emit.
+    reads: Optional[Tuple] = None
+    writes: Optional[Tuple] = None
 
 
 @dataclasses.dataclass
 class GlueStage:
     fn: Callable[[Dict[str, Any]], None]
+    # declared access sets (see GemmStage.reads/writes): what the eager
+    # glue closure reads and writes in the program env. Undeclared glue
+    # aliases everything, which serializes it against every neighbor in
+    # the dependence graph.
+    reads: Optional[Tuple] = None
+    writes: Optional[Tuple] = None
 
 
 def partition_layers(flags: Sequence[bool]) -> List[Tuple[int, int]]:
@@ -207,9 +226,17 @@ class StackedGemmStage:
     # the scan and writes results (residual stream, cache updates) to env
     run: Callable[[Dict[str, Any], Dict[str, jax.Array],
                    SuperkernelExecutor], None]
+    # declared access sets (see GemmStage.reads/writes): a scanned body
+    # reads the residual stream + cache slices and writes the residual
+    # stream + its cache-update chunk
+    reads: Optional[Tuple] = None
+    writes: Optional[Tuple] = None
 
 
 Stage = Any  # GemmStage | GlueStage | StackedGemmStage
+
+# monotonically-increasing KernelProgram instance ids (trace identity)
+_PROG_UIDS = itertools.count(1)
 
 
 def _scan_gemm(a: jax.Array, w_pad: jax.Array, n_real: int, *, bm: int,
@@ -260,6 +287,19 @@ class KernelProgram:
     # counts exactly once across steps, not zero times (hidden behind the
     # batch's healthy anchor deadline) or once per step.
     req_deadlines: Tuple = ()
+    # KV-cache rows this program writes, as ("kv", owner, slot) resources —
+    # the serving engine binds the tenant's cache identity + slot indices
+    # (all batch rows for a decode step, the reserved slot for a prefill).
+    # Ops inherit the set on their trace records; the schedule certifier
+    # rejects any coalesced group whose members' sets overlap (two
+    # concurrent writers to one KV row). Empty for raw programs — no
+    # declared rows, no possible overlap.
+    kv_writes: Tuple = ()
+    # instance identity for trace records / program-order certification
+    # (seq_index resets across a stream's successive step programs, so
+    # (stream, seq) alone cannot express cross-program ordering)
+    uid: int = dataclasses.field(
+        default_factory=lambda: next(_PROG_UIDS), compare=False)
     _gemm_suffix: Optional[List[float]] = dataclasses.field(
         default=None, repr=False, compare=False)
     # set by ProgramTemplate.bind: programs bound from one template share
@@ -363,11 +403,14 @@ class ProgramTemplate:
              slo_s: float = float("inf"), arrival_t: float = 0.0,
              deadline_t: float = float("inf"),
              req_deadlines: Tuple = (),
+             kv_writes: Tuple = (),
              env_extra: Optional[Dict[str, Any]] = None) -> KernelProgram:
         """Instantiate one step: fresh env + deadlines, shared stages.
 
         ``env_extra`` merges additional per-step entries into the program
-        env (the prefill path binds ``real_len`` / ``slot`` / ``req``)."""
+        env (the prefill path binds ``real_len`` / ``slot`` / ``req``);
+        ``kv_writes`` declares the ("kv", owner, slot) cache rows this
+        step writes (see KernelProgram.kv_writes)."""
         if self.kind == "prefill":
             assert int(tokens.shape[1]) == self.batch, \
                 (tokens.shape, self.batch)
@@ -383,6 +426,7 @@ class ProgramTemplate:
                              deadline_t=deadline_t, batch=self.batch,
                              kind=self.kind,
                              req_deadlines=tuple(req_deadlines),
+                             kv_writes=tuple(kv_writes),
                              _suffix_fn=self.gemm_suffix)
 
 
@@ -410,7 +454,9 @@ def dense_program_cache_key(model, params, batch: int, cache, *,
 # ---------------------------------------------------------------------------
 
 def _emit_dense_body(cfg: ModelConfig, params, stages: List[Stage], *,
-                     m_rows: int, attend_for, ffn_for=None) -> None:
+                     m_rows: int, attend_for, ffn_for=None,
+                     attend_reads: Tuple = ("wq", "wk", "wv", "cache")
+                     ) -> None:
     """Emit the per-layer stage scaffolding shared by the dense DECODE and
     PREFILL builders: pre-norm, the wq/wk/wv projections, the phase-specific
     attention glue (``attend_for(l, lp, is_global)``), wo, post-norm and the
@@ -435,12 +481,13 @@ def _emit_dense_body(cfg: ModelConfig, params, stages: List[Stage], *,
     # the superkernel) when they literally serve the same weights
     pid = id(params)
 
-    def glue(fn):
-        stages.append(GlueStage(fn))
+    def glue(fn, reads=None, writes=None):
+        stages.append(GlueStage(fn, reads=reads, writes=writes))
 
-    def gemm(tag, wkey, wfn, infn, outfn, n, k):
+    def gemm(tag, wkey, wfn, infn, outfn, n, k, reads, writes):
         stages.append(GemmStage(tag, wkey, wfn, infn, outfn,
-                                shape=GemmShape(m=m_rows, n=n, k=k)))
+                                shape=GemmShape(m=m_rows, n=n, k=k),
+                                reads=reads, writes=writes))
 
     for l in range(cfg.num_layers):
         lp = jax.tree_util.tree_map(lambda a, l=l: a[l], blocks)
@@ -449,27 +496,31 @@ def _emit_dense_body(cfg: ModelConfig, params, stages: List[Stage], *,
         def pre_attn(env, lp=lp):
             env["h"] = rmsnorm(env["x"], lp["ln1"], cfg.norm_eps)
 
-        glue(pre_attn)
+        glue(pre_attn, reads=("x",), writes=("h",))
         for name, n_heads in (("wq", cfg.num_heads), ("wk", cfg.num_kv_heads),
                               ("wv", cfg.num_kv_heads)):
             gemm(f"attn_{name}", weight_key(cfg.name, pid, name, layer=l),
                  lambda lp=lp, name=name: lp["attn"][name],
                  lambda env: env["h"],
                  lambda env, out, name=name: env.__setitem__(name, out),
-                 n_heads * hd, cfg.d_model)
+                 n_heads * hd, cfg.d_model, ("h",), (name,))
 
-        glue(attend_for(l, lp, is_global))
+        # the attention glue's read set is phase-specific (decode streams
+        # the slotted cache, prefill ropes by env positions) — the caller
+        # passes the accurate set via attend_reads
+        glue(attend_for(l, lp, is_global), reads=attend_reads,
+             writes=("attn_out", "new_layers"))
         gemm("attn_wo", weight_key(cfg.name, pid, "wo", layer=l),
              lambda lp=lp: lp["attn"]["wo"],
              lambda env: env["attn_out"],
              lambda env, out: env.__setitem__("attn_proj", out),
-             cfg.d_model, cfg.num_heads * hd)
+             cfg.d_model, cfg.num_heads * hd, ("attn_out",), ("attn_proj",))
 
         def post_attn(env, lp=lp):
             env["x"] = env["x"] + env["attn_proj"]
             env["h2"] = rmsnorm(env["x"], lp["ln2"], cfg.norm_eps)
 
-        glue(post_attn)
+        glue(post_attn, reads=("x", "attn_proj"), writes=("x", "h2"))
         if ffn_for is not None:
             ffn_for(l, lp, stages)
             continue
@@ -477,27 +528,27 @@ def _emit_dense_body(cfg: ModelConfig, params, stages: List[Stage], *,
              lambda lp=lp: lp["mlp"]["w_gate"],
              lambda env: env["h2"],
              lambda env, out: env.__setitem__("gate", out),
-             cfg.d_ff, cfg.d_model)
+             cfg.d_ff, cfg.d_model, ("h2",), ("gate",))
         gemm("ffn_up", weight_key(cfg.name, pid, "w_up", layer=l),
              lambda lp=lp: lp["mlp"]["w_up"],
              lambda env: env["h2"],
              lambda env, out: env.__setitem__("up", out),
-             cfg.d_ff, cfg.d_model)
+             cfg.d_ff, cfg.d_model, ("h2",), ("up",))
 
         def act(env):
             env["act"] = _silu_mul(env["gate"], env["up"])
 
-        glue(act)
+        glue(act, reads=("gate", "up"), writes=("act",))
         gemm("ffn_down", weight_key(cfg.name, pid, "w_down", layer=l),
              lambda lp=lp: lp["mlp"]["w_down"],
              lambda env: env["act"],
              lambda env, out: env.__setitem__("down", out),
-             cfg.d_model, cfg.d_ff)
+             cfg.d_model, cfg.d_ff, ("act",), ("down",))
 
         def post_ffn(env):
             env["x"] = env["x"] + env["down"]
 
-        glue(post_ffn)
+        glue(post_ffn, reads=("x", "down"), writes=("x",))
 
 
 # tied-embedding transposes, memoized per embed-array identity: every
@@ -540,7 +591,8 @@ def _emit_decode_embed(cfg: ModelConfig, params, stages: List[Stage]) -> None:
         env["x"] = (x * jnp.asarray(jnp.sqrt(cfg.d_model), x.dtype))[:, 0]
         env["pos"] = env["cache"]["pos"]
 
-    stages.append(GlueStage(embed))
+    stages.append(GlueStage(embed, reads=("tokens", "cache"),
+                            writes=("x", "pos")))
 
 
 def _emit_final_logits(cfg: ModelConfig, params, stages: List[Stage], *,
@@ -550,7 +602,7 @@ def _emit_final_logits(cfg: ModelConfig, params, stages: List[Stage], *,
     def final_norm(env):
         env["hf"] = rmsnorm(env["x"], params["final_norm"], cfg.norm_eps)
 
-    stages.append(GlueStage(final_norm))
+    stages.append(GlueStage(final_norm, reads=("x",), writes=("hf",)))
     _emit_unembed(cfg, params, stages, m_rows=m_rows)
 
 
@@ -571,7 +623,8 @@ def _emit_unembed(cfg: ModelConfig, params, stages: List[Stage], *,
         "unembed", weight_key(cfg.name, pid, "unembed"), wfn,
         lambda env: env["hf"],
         lambda env, out: env.__setitem__("logits", out),
-        shape=GemmShape(m=m_rows, n=n, k=cfg.d_model)))
+        shape=GemmShape(m=m_rows, n=n, k=cfg.d_model),
+        reads=("hf",), writes=("logits",)))
 
 
 def _gqa_decode_attend(cfg: ModelConfig, B: int, q_flat, k_flat, v_flat,
@@ -872,7 +925,8 @@ def _stacked_dense_body_stage(model, params, B: int, lo: int, hi: int, *,
     return StackedGemmStage(
         tag=f"body_{lo}_{hi}",
         weight_key=weight_key(cfg.name, pid, "body", stack=(lo, hi)),
-        operands=operands, layers=Lsub, run=run)
+        operands=operands, layers=Lsub, run=run,
+        reads=("x", "cache"), writes=("x", "new_layers"))
 
 
 def _build_stacked_gqa_decode_template(model, params, batch: int, *,
@@ -899,7 +953,8 @@ def _build_stacked_gqa_decode_template(model, params, batch: int, *,
             },
         }
 
-    stages.append(GlueStage(finish))
+    stages.append(GlueStage(finish, reads=("cache", "new_layers"),
+                            writes=("cache",)))
     return ProgramTemplate(stages=stages, batch=batch, model_name=cfg.name)
 
 
@@ -912,9 +967,6 @@ def _build_gqa_decode_template(model, params, batch: int, *,
     cfg: ModelConfig = model.cfg
     B = batch
     stages: List[Stage] = []
-
-    def glue(fn):
-        stages.append(GlueStage(fn))
 
     _emit_decode_embed(cfg, params, stages)
     _emit_dense_body(cfg, params, stages, m_rows=B,
@@ -931,7 +983,8 @@ def _build_gqa_decode_template(model, params, batch: int, *,
             },
         }
 
-    glue(finish)
+    stages.append(GlueStage(finish, reads=("cache", "new_layers"),
+                            writes=("cache",)))
     return ProgramTemplate(stages=stages, batch=B, model_name=cfg.name)
 
 
@@ -1020,8 +1073,8 @@ def build_moe_decode_template(model, params, batch: int, *,
         moe_p = lp["moe"]
         sliced = [moe_lib.expert_ffn_weights(moe_p, e) for e in range(E)]
 
-        def glue(fn):
-            stages.append(GlueStage(fn))
+        def glue(fn, reads=None, writes=None):
+            stages.append(GlueStage(fn, reads=reads, writes=writes))
 
         def route_dispatch(env, moe_p=moe_p):
             buf, meta, wgt = _jitted_moe_route(cfg, B, C)(
@@ -1030,7 +1083,8 @@ def build_moe_decode_template(model, params, batch: int, *,
             env["moe_w"] = wgt
             env["moe_down"] = [None] * E
 
-        glue(route_dispatch)
+        glue(route_dispatch, reads=("h2",),
+             writes=("moe_buf", "moe_meta", "moe_w", "moe_down"))
         for e in range(E):
             wg, wu, wd = sliced[e]
             stages.append(GemmStage(
@@ -1039,27 +1093,31 @@ def build_moe_decode_template(model, params, batch: int, *,
                 lambda w=wg: w,
                 lambda env, e=e: env["moe_buf"][0, e],
                 lambda env, out, e=e: env.__setitem__(("moe_gate", e), out),
-                shape=GemmShape(m=C, n=cfg.d_ff, k=d)))
+                shape=GemmShape(m=C, n=cfg.d_ff, k=d),
+                reads=("moe_buf",), writes=(("moe_gate", e),)))
             stages.append(GemmStage(
                 "expert_up",
                 weight_key(cfg.name, pid, "w_up", layer=l, expert=e),
                 lambda w=wu: w,
                 lambda env, e=e: env["moe_buf"][0, e],
                 lambda env, out, e=e: env.__setitem__(("moe_up", e), out),
-                shape=GemmShape(m=C, n=cfg.d_ff, k=d)))
+                shape=GemmShape(m=C, n=cfg.d_ff, k=d),
+                reads=("moe_buf",), writes=(("moe_up", e),)))
 
             def act(env, e=e):
                 env[("moe_act", e)] = _silu_mul(env.pop(("moe_gate", e)),
                                                 env.pop(("moe_up", e)))
 
-            glue(act)
+            glue(act, reads=(("moe_gate", e), ("moe_up", e)),
+                 writes=(("moe_act", e),))
             stages.append(GemmStage(
                 "expert_down",
                 weight_key(cfg.name, pid, "w_down", layer=l, expert=e),
                 lambda w=wd: w,
                 lambda env, e=e: env[("moe_act", e)],
                 lambda env, out, e=e: env["moe_down"].__setitem__(e, out),
-                shape=GemmShape(m=C, n=d, k=cfg.d_ff)))
+                shape=GemmShape(m=C, n=d, k=cfg.d_ff),
+                reads=(("moe_act", e),), writes=("moe_down",)))
 
         def combine(env):
             out_buf = jnp.stack(env.pop("moe_down"), axis=0)[None]
@@ -1068,7 +1126,9 @@ def build_moe_decode_template(model, params, batch: int, *,
             env.pop("moe_buf")
             env["x"] = env["x"] + y.reshape(B, d).astype(env["h2"].dtype)
 
-        glue(combine)
+        glue(combine, reads=("moe_down", "moe_w", "moe_meta", "moe_buf",
+                             "x", "h2"),
+             writes=("x",))
 
     return _build_gqa_decode_template(model, params, batch, ffn_for=ffn_for)
 
@@ -1109,7 +1169,7 @@ def _build_stacked_ssm_decode_template(model, params, batch: int
     def reset_layers(env):
         env["new_layers"] = {"conv": [], "h": []}
 
-    stages.append(GlueStage(reset_layers))
+    stages.append(GlueStage(reset_layers, reads=(), writes=("new_layers",)))
     operands = [
         StackedOperand(
             "ssm_in_proj", weight_key(cfg.name, pid, "in_proj",
@@ -1170,7 +1230,8 @@ def _build_stacked_ssm_decode_template(model, params, batch: int
     stages.append(StackedGemmStage(
         tag=f"body_{lo}_{hi}",
         weight_key=weight_key(cfg.name, pid, "body", stack=(lo, hi)),
-        operands=operands, layers=L, run=run))
+        operands=operands, layers=L, run=run,
+        reads=("x", "cache"), writes=("x", "new_layers")))
     _emit_final_logits(cfg, params, stages, m_rows=B)
 
     def finish(env):
@@ -1183,7 +1244,8 @@ def _build_stacked_ssm_decode_template(model, params, batch: int
             },
         }
 
-    stages.append(GlueStage(finish))
+    stages.append(GlueStage(finish, reads=("cache", "new_layers"),
+                            writes=("cache",)))
     return ProgramTemplate(stages=stages, batch=B, model_name=cfg.name)
 
 
@@ -1212,28 +1274,29 @@ def build_ssm_decode_template(model, params, batch: int, *,
     pid = id(params)
     stages: List[Stage] = []
 
-    def glue(fn):
-        stages.append(GlueStage(fn))
+    def glue(fn, reads=None, writes=None):
+        stages.append(GlueStage(fn, reads=reads, writes=writes))
 
     _emit_decode_embed(cfg, params, stages)
 
     def reset_layers(env):
         env["new_layers"] = {"conv": [], "h": []}
 
-    glue(reset_layers)
+    glue(reset_layers, reads=(), writes=("new_layers",))
     for l in range(cfg.num_layers):
         lp = jax.tree_util.tree_map(lambda a, l=l: a[l], blocks)
 
         def pre(env, lp=lp):
             env["h"] = rmsnorm(env["x"], lp["ln1"], cfg.norm_eps)
 
-        glue(pre)
+        glue(pre, reads=("x",), writes=("h",))
         stages.append(GemmStage(
             "ssm_in_proj", weight_key(cfg.name, pid, "in_proj", layer=l),
             lambda lp=lp: lp["mamba"]["in_proj"],
             lambda env: env["h"],
             lambda env, out: env.__setitem__("zxbcdt", out),
-            shape=GemmShape(m=B, n=n_in, k=d)))
+            shape=GemmShape(m=B, n=n_in, k=d),
+            reads=("h",), writes=("zxbcdt",)))
 
         def scan(env, lp=lp, l=l):
             layers = env["cache"]["layers"]
@@ -1244,13 +1307,15 @@ def build_ssm_decode_template(model, params, batch: int, *,
             env["new_layers"]["h"].append(new_c["h"])
             env["ssm_y"] = y
 
-        glue(scan)
+        glue(scan, reads=("cache", "zxbcdt"),
+             writes=("new_layers", "ssm_y"))
         stages.append(GemmStage(
             "ssm_out_proj", weight_key(cfg.name, pid, "out_proj", layer=l),
             lambda lp=lp: lp["mamba"]["out_proj"],
             lambda env: env["ssm_y"],
             lambda env, out: env.__setitem__("x", env["x"] + out),
-            shape=GemmShape(m=B, n=d, k=d_inner)))
+            shape=GemmShape(m=B, n=d, k=d_inner),
+            reads=("ssm_y", "x"), writes=("x",)))
 
     _emit_final_logits(cfg, params, stages, m_rows=B)
 
@@ -1264,7 +1329,7 @@ def build_ssm_decode_template(model, params, batch: int, *,
             },
         }
 
-    glue(finish)
+    glue(finish, reads=("cache", "new_layers"), writes=("cache",))
     return ProgramTemplate(stages=stages, batch=B, model_name=cfg.name)
 
 
@@ -1394,7 +1459,8 @@ def _stacked_prefill_body_stage(model, params, Sp: int, lo: int, hi: int
     return StackedGemmStage(
         tag=f"body_{lo}_{hi}",
         weight_key=weight_key(cfg.name, pid, "body", stack=(lo, hi)),
-        operands=operands, layers=Lsub, run=run)
+        operands=operands, layers=Lsub, run=run,
+        reads=("x", "positions"), writes=("x", "new_layers"))
 
 
 def prefill_program_cache_key(model, params, seq_len: int, cache, *,
@@ -1439,15 +1505,15 @@ def build_dense_prefill_template(model, params, seq_len: int, *,
     Sp = seq_len
     stages: List[Stage] = []
 
-    def glue(fn):
-        stages.append(GlueStage(fn))
+    def glue(fn, reads=None, writes=None):
+        stages.append(GlueStage(fn, reads=reads, writes=writes))
 
     def embed(env):
         x = params["embed"][env["tokens"]]            # [1, Sp, d]
         env["x"] = (x * jnp.asarray(jnp.sqrt(cfg.d_model), x.dtype))[0]
         env["positions"] = jnp.arange(Sp)[None, :]    # rope positions
 
-    glue(embed)
+    glue(embed, reads=("tokens",), writes=("x", "positions"))
 
     if stacked:
         for lo, hi in partition_layers(cfg.global_layer_flags()):
@@ -1466,8 +1532,11 @@ def build_dense_prefill_template(model, params, seq_len: int, *,
 
             return attend
 
+        # prefill attention never touches the live cache: k/v come from
+        # the projections and rope by env positions, landing in new_layers
         _emit_dense_body(cfg, params, stages, m_rows=Sp,
-                         attend_for=attend_for)
+                         attend_for=attend_for,
+                         attend_reads=("wq", "wk", "wv", "positions"))
 
     def final_norm(env):
         # only the last REAL position is unembedded (Model.prefill returns
@@ -1475,7 +1544,7 @@ def build_dense_prefill_template(model, params, seq_len: int, *,
         last = env["x"][env["real_len"] - 1:env["real_len"]]
         env["hf"] = rmsnorm(last, params["final_norm"], cfg.norm_eps)
 
-    glue(final_norm)
+    glue(final_norm, reads=("x", "real_len"), writes=("hf",))
     _emit_unembed(cfg, params, stages, m_rows=1)
 
     def finish(env):
@@ -1504,7 +1573,8 @@ def build_dense_prefill_template(model, params, seq_len: int, *,
         env["cache"] = {"pos": cache["pos"].at[slot].set(S),
                         "layers": new_layers}
 
-    glue(finish)
+    glue(finish, reads=("cache", "new_layers", "real_len", "slot"),
+         writes=("cache",))
     return ProgramTemplate(stages=stages, batch=Sp, model_name=cfg.name,
                            kind="prefill")
 
@@ -1613,6 +1683,13 @@ class JitStats:
     # cache. DispatchStats supports ``+`` so merge() folds it like every
     # other counter.
     dispatch: DispatchStats = dataclasses.field(default_factory=DispatchStats)
+    # schedule-certifier counters (repro.analysis.certify, wired by
+    # ServingEngine(certify=True)): per-op/per-group legality checks run
+    # and violations observed. A gating bench asserts violations == 0
+    # while checks > 0 — certification that silently checked nothing
+    # would otherwise read as a clean pass.
+    hazard_checks: int = 0
+    hazard_violations: int = 0
 
     @property
     def mean_group(self) -> float:
@@ -1655,10 +1732,17 @@ class JitSession:
     shared virtual clock one scheduler decision (``tick``) at a time.
     """
 
-    def __init__(self, jit: "VLIWJit"):
+    def __init__(self, jit: "VLIWJit", record_trace: bool = False):
         self.jit = jit
         self.stats = JitStats()
         self.sched = OoOScheduler(jit.cost, jit.coalescer, jit.sched_cfg)
+        # dispatch trace for the schedule certifier (repro.analysis):
+        # admissions, waits and per-op dispatch records, appended BEFORE
+        # each superkernel executes so a crash mid-dispatch still leaves
+        # the offending group on the trace. None (default) records
+        # nothing — zero steady-state overhead unless certification is on.
+        self.trace: Optional[ScheduleTrace] = \
+            ScheduleTrace() if record_trace else None
         # pending GEMM per program: op_id -> (program, stage)
         self.live: Dict[int, Tuple[KernelProgram, GemmStage]] = {}
         self._done: List[KernelProgram] = []
@@ -1691,6 +1775,11 @@ class JitSession:
         # just the starting pool
         if self.live and self._started:
             self.stats.mid_flight_admissions += 1
+        if self.trace is not None:
+            self.trace.prog_admits.append(ProgramAdmit(
+                prog_uid=prog.uid, stream=prog.stream_id, kind=prog.kind,
+                req_ids=tuple(r for r, _ in prog.req_deadlines),
+                kv_writes=tuple(prog.kv_writes)))
         st = prog.advance_glue()
         if st is None:            # pure-glue program: completes immediately
             self._done.append(prog)
@@ -1715,6 +1804,7 @@ class JitSession:
                      op_kind=prog.kind)
         # carry operand bindings on the op (declarative dispatch payload)
         op.payload = (a, w, st.weight_key)
+        op.prog_uid = prog.uid
         # per-request identity: the scheduler accounts SLO demotions per
         # request id, not per (stream, deadline) of the batch anchor
         op.req_deadlines = prog.req_deadlines
@@ -1744,16 +1834,39 @@ class JitSession:
                      model_id=st.weight_key[0],
                      op_kind=prog.kind)
         op.stack = tuple((od.tag, od.shape) for od in st.operands)
-        # no eager activation/weight binding — the stacked operands are
+        # no eager activation binding — the stacked operands are
         # materialized at dispatch time (_run_stacked); the key slot keeps
-        # shared-operand detection uniform with plain ops
-        op.payload = (None, None, st.weight_key)
+        # shared-operand detection uniform with plain ops. The weight slot
+        # carries the operand GUARD arrays (the original stacked params,
+        # stable across ticks) so op_weight_identity resolves a stacked
+        # op's operand identity for the certifier's shared-operand check.
+        op.payload = (None,
+                      tuple(a for od in st.operands for a in od.guard),
+                      st.weight_key)
+        op.prog_uid = prog.uid
         op.req_deadlines = prog.req_deadlines
         if math.isfinite(op.deadline_t):
             op.latest_start_t = op.deadline_t \
                 - prog.remaining_gemm_time(self.jit.cost, prog.pc)
         self.live[op.op_id] = (prog, st)
         self.sched.push([op])
+
+    def _op_record(self, op: KernelOp) -> OpRecord:
+        """Snapshot one live op for the dispatch trace. Env writes come
+        from the stage's declared ``writes`` set — an undeclared stage
+        conservatively aliases everything (``("*",)``), qualified by the
+        program env's identity so two tenants' private envs never read as
+        conflicting resources."""
+        prog, st = self.live[op.op_id]
+        writes = getattr(st, "writes", None)
+        return OpRecord(
+            op_id=op.op_id, stream=op.stream_id, prog_uid=op.prog_uid,
+            tag=op.tag, seq=op.seq_index, op_kind=op.op_kind,
+            deadline_t=op.deadline_t, latest_start_t=op.latest_start_t,
+            weight_key=op_weight_key(op), weight_id=op_weight_identity(op),
+            kv_writes=tuple(prog.kv_writes),
+            env_writes=tuple(writes) if writes is not None else ("*",),
+            env_id=id(prog.env))
 
     def _run_stacked(self, ops, completed) -> None:
         """Dispatch a coalesced group of layer-stacked body ops: pack each
@@ -1816,6 +1929,8 @@ class JitSession:
         self._sync_cache_stats()
         if decision.kind == "wait":
             self.stats.waits += 1
+            if self.trace is not None:
+                self.trace.waits.append(decision.wait_until)
             return TickEvent("wait", decision.wait_until, completed=completed)
         assert decision.kind == "dispatch" and decision.plan
         plan = decision.plan
@@ -1823,6 +1938,13 @@ class JitSession:
         # ops all carry ONE weight key loads the weights once
         shared = shared_weight_key(plan.ops) is not None
         stacked = plan.ops[0].stack is not None
+        if self.trace is not None:
+            # record BEFORE execution: a dispatch that crashes (e.g. the
+            # executor's shared-operand identity guard) still leaves the
+            # offending group on the trace for the certifier's post-mortem
+            self.trace.dispatches.append(DispatchRecord(
+                t=now, shared_operand=shared,
+                ops=tuple(self._op_record(op) for op in plan.ops)))
         if stacked:
             # coalesce_key keeps stacked and plain ops in disjoint buckets
             assert all(op.stack is not None for op in plan.ops)
@@ -1904,9 +2026,13 @@ class VLIWJit:
                                       byte_capacity=weight_budget_bytes)
         self.executor = SuperkernelExecutor(self.weight_cache, bm=bm)
 
-    def session(self) -> JitSession:
-        """Open an admission-open event-loop session (engine entry point)."""
-        return JitSession(self)
+    def session(self, record_trace: bool = False) -> JitSession:
+        """Open an admission-open event-loop session (engine entry point).
+
+        ``record_trace=True`` makes the session keep a ``ScheduleTrace``
+        (admissions, waits, per-op dispatch records) for the schedule
+        certifier — the engine's ``certify=True`` path."""
+        return JitSession(self, record_trace=record_trace)
 
     def run(self, programs: Sequence[KernelProgram],
             arrivals: Optional[Sequence[Arrival]] = None,

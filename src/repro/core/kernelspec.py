@@ -73,6 +73,14 @@ class KernelOp:
     # signature (clustering.coalesce_key).
     stack: Optional[Tuple] = dataclasses.field(default=None, repr=False,
                                                compare=False)
+    # identity of the KernelProgram INSTANCE that emitted this op (set by
+    # JitSession._push_op from KernelProgram.uid; 0 for raw op streams).
+    # seq_index alone cannot express program order across a stream's
+    # successive step programs — the schedule certifier
+    # (repro.analysis.certify) needs (prog_uid, seq) to verify that ops of
+    # one program ran in order AND that two programs of one stream never
+    # interleaved.
+    prog_uid: int = dataclasses.field(default=0, compare=False)
 
     @property
     def slack(self) -> float:

@@ -84,6 +84,14 @@ class OoOScheduler:
             self._demoted.add(key)
             self.evictions += 1
 
+    def demoted_requests(self) -> Set[int]:
+        """Request ids demoted (evicted) from EDF anchoring so far — the
+        ``("req", rid)`` entries of the dedup set. The serving engine feeds
+        these into the schedule certifier's conservation check: an admitted
+        request must retire, appear here, or surface unfinished."""
+        return {key[1] for key in self._demoted
+                if len(key) == 2 and key[0] == "req"}
+
     # ------------------------------------------------------------------
     # queue management
     # ------------------------------------------------------------------

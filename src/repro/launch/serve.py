@@ -34,6 +34,10 @@ def main() -> None:
     ap.add_argument("--max-new-tokens", type=int, default=4)
     ap.add_argument("--slo-ms", type=float, default=5.0)
     ap.add_argument("--bursty", action="store_true")
+    ap.add_argument("--certify", action="store_true",
+                    help="record a ScheduleTrace and run the hazard "
+                         "certifier per tick (vliw mode); raises on the "
+                         "first illegal reordering")
     args = ap.parse_args()
 
     models = {}
@@ -55,7 +59,7 @@ def main() -> None:
         tenants = [Tenant(n, *models[a], cache_len=max(
             32, args.prompt_len + args.max_new_tokens + 1), max_batch=4)
             for n, a in zip(names, args.tenants)]
-        eng = ServingEngine(tenants, mode=mode)
+        eng = ServingEngine(tenants, mode=mode, certify=args.certify)
         rep = eng.run(copy.deepcopy(trace))
         line = (f"{mode:8s} modeled={rep.modeled_time_s*1e3:8.3f} ms  "
                 f"mean_lat={rep.mean_latency*1e3:7.3f} ms  "
@@ -69,6 +73,9 @@ def main() -> None:
                      f"shared={rep.jit.shared_dispatches} "
                      f"wpack_hit={d.weight_hit_rate:.0%} "
                      f"retraces={d.retraces}]")
+            if args.certify:
+                line += (f"  [certified: checks={rep.jit.hazard_checks} "
+                         f"violations={rep.jit.hazard_violations}]")
         print(line)
 
 

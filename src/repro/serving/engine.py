@@ -76,6 +76,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis.certify import ScheduleCertifier, check_conservation
 from repro.configs.base import ModelConfig
 from repro.core.costmodel import CostModel, GemmShape, TPUV5E
 from repro.core.jit import (JitStats, KernelProgram, VLIWJit,
@@ -225,10 +226,19 @@ class ServingEngine:
                  predict_arrivals: bool = False,
                  arrival_alpha: float = 0.2,
                  weight_budget_bytes: Optional[int] = 1 << 30,
-                 stacked_layers: bool = True):
+                 stacked_layers: bool = True,
+                 certify: bool = False):
         assert mode in ("time", "batched", "vliw")
         self.tenants = {t.name: t for t in tenants}
         self.mode = mode
+        # certify=True records a ScheduleTrace on the vliw session and runs
+        # the incremental hazard certifier (repro.analysis.certify) on every
+        # tick's dispatches plus whole-run conservation — a HazardViolation
+        # raises at the offending dispatch. Off by default: tracing every
+        # op record is pure overhead when nobody is checking. The last run's
+        # trace stays on ``last_trace`` (mutation tests re-certify it).
+        self.certify = certify
+        self.last_trace = None
         # stacked_layers=True (default) compiles tenants to layer-stacked
         # templates (one scanned body per homogeneous sub-stack; build and
         # trace size O(1) in depth). False keeps per-layer emission — the
@@ -410,15 +420,16 @@ class ServingEngine:
             req.tokens_out.append(int(toks[slot]))
             t.slot_remaining[slot] -= 1
 
-    def _retire(self, t: Tenant, now: float) -> int:
-        """Free slots of finished requests; returns how many retired."""
-        done = 0
+    def _retire(self, t: Tenant, now: float) -> List[ServeRequest]:
+        """Free slots of finished requests; returns the retired requests
+        (the vliw trace records their ids, everyone else just counts)."""
+        done: List[ServeRequest] = []
         for slot in t.active_slots():
             if t.slot_remaining[slot] <= 0:
                 req = t.slot_req[slot]
                 req.finish_t = now
                 t.slot_req[slot] = None
-                done += 1
+                done.append(req)
         return done
 
     # ------------------------------------------------------------------
@@ -482,6 +493,8 @@ class ServingEngine:
             stream_id=stream_id, tokens=padded, cache=t.cache,
             arrival_t=now, deadline_t=deadline,
             req_deadlines=((req.req_id, final),),
+            # the prefill epilogue writes exactly its reserved slot's rows
+            kv_writes=(("kv", t.name, slot),) if slot is not None else (),
             env_extra={"real_len": s, "slot": slot, "req": req})
         if needs_slot:
             t.slot_req[slot] = req
@@ -566,6 +579,9 @@ class ServingEngine:
         return template.bind(
             stream_id=stream_id, tokens=t.slot_tok, cache=t.cache,
             arrival_t=now, deadline_t=deadline,
+            # a decode step appends one position to every batch row of the
+            # tenant's slotted cache (idle rows advance too)
+            kv_writes=tuple(("kv", t.name, s) for s in range(batch)),
             req_deadlines=tuple((r.req_id, f)
                                 for (r, _), f in zip(reqs, finals)))
 
@@ -575,7 +591,10 @@ class ServingEngine:
         # previous trace describes a different workload (and would poison
         # observe(), whose last-arrival times now sit past every new t)
         self._arrival_pred.reset()
-        session = self.jit.session()
+        session = self.jit.session(record_trace=self.certify)
+        trace = session.trace
+        cert = ScheduleCertifier() if trace is not None else None
+        certified = 0          # dispatch records already fed to the certifier
         stream_ids = {name: i for i, name in enumerate(self.tenants)}
         id2name = {i: name for name, i in stream_ids.items()}
         inflight: Dict[str, KernelProgram] = {}
@@ -615,6 +634,8 @@ class ServingEngine:
                         continue
                     inflight[req.tenant] = prog
                     session.admit(prog)
+                    if trace is not None:
+                        trace.req_admits.append((req.req_id, now))
                     progressed = True
                     continue
                 dt = self._admit(t, req, rng, now)
@@ -622,8 +643,12 @@ class ServingEngine:
                     still.append(req)  # tenant slots full; retry later
                     continue
                 now += dt
+                if trace is not None:
+                    trace.req_admits.append((req.req_id, now))
                 if not math.isnan(req.finish_t):
                     n_done += 1        # retired at admission (single token)
+                    if trace is not None:
+                        trace.req_retires.append((req.req_id, now))
                 progressed = True
             waiting = still
             session.set_next_arrival(
@@ -645,6 +670,13 @@ class ServingEngine:
 
             # 3. one scheduler decision on the shared virtual clock
             ev = session.tick(now)
+            if cert is not None:
+                # certify this tick's new dispatches at the tick they
+                # happened — a HazardViolation raises right here, with the
+                # offending group as the last trace record
+                for d in trace.dispatches[certified:]:
+                    cert.observe(d)
+                certified = len(trace.dispatches)
             progressed |= ev.kind != "idle"
             now = max(now, ev.t)
             for prog in ev.completed:
@@ -653,6 +685,9 @@ class ServingEngine:
                 if prog.kind == "prefill":
                     now, done = self._on_prefill_complete(t, prog, now)
                     n_done += done
+                    if done and trace is not None:
+                        trace.req_retires.append(
+                            (prog.env["req"].req_id, now))
                     continue
                 t.cache = prog.env["cache"]
                 self._consume(t, prog.env["logits"][:, None, :])
@@ -661,13 +696,21 @@ class ServingEngine:
                 # over-billed partially-filled tenants
                 now += self._attn_time(t.cfg,
                                        max(len(t.active_slots()), 1))
-                n_done += self._retire(t, now)
+                retired = self._retire(t, now)
+                n_done += len(retired)
+                if trace is not None:
+                    trace.req_retires.extend(
+                        (r.req_id, now) for r in retired)
 
             # 4. non-JIT tenants interleave monolithic batched steps
             for t in self.tenants.values():
                 if not self._jit_capable(t) and t.active_slots():
                     now += self._tenant_batched_step(t)
-                    n_done += self._retire(t, now)
+                    retired = self._retire(t, now)
+                    n_done += len(retired)
+                    if trace is not None:
+                        trace.req_retires.extend(
+                            (r.req_id, now) for r in retired)
                     progressed = True
 
             if n_done >= total and not session.live and pi >= len(pending) \
@@ -688,6 +731,21 @@ class ServingEngine:
                 if not session.live and not inflight and not any(
                         t.active_slots() for t in self.tenants.values()):
                     break
+        if trace is not None:
+            # close the request lifecycle, then balance it: SLO-demoted
+            # requests from the scheduler's eviction dedup, plus admitted
+            # requests that never finished (refused-admission requests
+            # were never admitted, so they stay out of the trace entirely)
+            trace.evicted = set(session.sched.demoted_requests())
+            by_id = {r.req_id: r for r in pending}
+            admitted = {rid for rid, _ in trace.req_admits}
+            trace.unfinished = {rid for rid in admitted
+                                if math.isnan(by_id[rid].finish_t)}
+            cert.checks += 1
+            cert.violations.extend(check_conservation(trace))
+            session.stats.hazard_checks += cert.checks
+            session.stats.hazard_violations += len(cert.violations)
+        self.last_trace = trace
         self.jit_stats.merge(session.stats)
         return now
 
@@ -718,13 +776,27 @@ class ServingEngine:
                 break
             now += dt
             for t in self.tenants.values():
-                n_done += self._retire(t, now)
+                n_done += len(self._retire(t, now))
         return now
 
     # ------------------------------------------------------------------
     def run(self, trace: Sequence[ServeRequest],
             rng: Optional[jax.Array] = None) -> ServeReport:
         rng = rng if rng is not None else jax.random.PRNGKey(0)
+        # request identity keys everything downstream — prompt synthesis
+        # (_make_prompt folds req_id into the rng), the scheduler's
+        # per-request eviction dedup, and the certifier's conservation
+        # check — so a trace with colliding ids must be rejected up front
+        # instead of silently double-counting one identity
+        ids: Dict[int, int] = {}
+        for r in trace:
+            ids[r.req_id] = ids.get(r.req_id, 0) + 1
+        dupes = sorted(i for i, n in ids.items() if n > 1)
+        if dupes:
+            raise ValueError(
+                f"duplicate req_id(s) in trace: {dupes} — request ids must "
+                f"be unique per run (they key prompt synthesis, eviction "
+                f"dedup and retirement accounting)")
         pending = sorted(trace, key=lambda r: r.arrival_t)
         wall0 = _time.perf_counter()
         if self.mode == "vliw":

@@ -1,0 +1,138 @@
+"""Tracer-hazard linter: each rule fires on seeded bad code, the shipped
+tree lints clean, and the CLI contract (--strict exit code, --json output)
+holds."""
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+from repro.analysis.lint import Finding, lint_file, lint_paths, main
+
+REPO_SRC = Path(__file__).resolve().parents[1] / "src" / "repro"
+
+
+def _codes(findings):
+    return sorted(f.code for f in findings)
+
+
+def _lint_source(tmp_path, source, name="probe.py"):
+    p = tmp_path / name
+    p.write_text(source)
+    return lint_file(p)
+
+
+def test_shipped_tree_lints_clean():
+    findings = lint_paths([REPO_SRC])
+    assert findings == [], "\n".join(f.render() for f in findings)
+
+
+def test_th001_jit_closure_over_array_derived(tmp_path):
+    fs = _lint_source(tmp_path, """\
+import jax
+
+def build(params):
+    w = params["w"]
+    def inner(x):
+        return x @ w
+    return jax.jit(inner)
+""")
+    assert _codes(fs) == ["TH001"]
+    assert fs[0].symbol == "inner" and "'w'" in fs[0].message
+
+
+def test_th001_factory_returned_function_is_rooted(tmp_path):
+    fs = _lint_source(tmp_path, """\
+import jax
+
+def make_step(params):
+    blocks = params["blocks"]
+    def step(x):
+        return x + blocks
+    return step
+
+fn = jax.jit(make_step(P))
+""")
+    assert _codes(fs) == ["TH001"]
+
+
+def test_th001_allows_argument_passing_and_module_scope(tmp_path):
+    fs = _lint_source(tmp_path, """\
+import jax
+
+def make_step(params, cfg):
+    def step(p, x):
+        return x @ p["w"] * cfg.scale     # params enter as an argument
+    return step
+
+fn = jax.jit(make_step(P, C))
+
+W = load()
+top = jax.jit(lambda x: x @ W)            # module-level capture: deliberate
+""")
+    assert fs == []
+
+
+def test_th002_cache_key_missing_ingredients(tmp_path):
+    fs = _lint_source(tmp_path, """\
+def broken_program_cache_key(model, params):
+    return (id(model), "stacked")
+""")
+    assert _codes(fs) == ["TH002"]
+    assert "dtype" in fs[0].message and ".shape" in fs[0].message
+
+
+def test_th002_complete_cache_key_passes(tmp_path):
+    fs = _lint_source(tmp_path, """\
+def good_program_cache_key(model, params, cache):
+    return (id(model), str(params["embed"].dtype),
+            tuple(cache["k"].shape), ("stacked", True))
+""")
+    assert fs == []
+
+
+def test_th003_eager_raw_glue_call(tmp_path):
+    fs = _lint_source(tmp_path, """\
+from repro.core.jit import _gqa_decode_attend
+
+def eager_path(env):
+    return _gqa_decode_attend(env, 0)
+""")
+    assert _codes(fs) == ["TH003"]
+    assert "_gqa_decode_attend" in fs[0].message
+
+
+def test_th003_allows_jit_rooted_chain_and_defining_module(tmp_path):
+    fs = _lint_source(tmp_path, """\
+import jax
+from repro.models.ssm import decode_core
+
+def core(x):
+    return decode_core(x)           # rooted below
+
+fn = jax.jit(core)
+
+def route(x):                       # top-level def: this module defines it
+    return x
+
+def local_use(x):
+    return route(x)
+""")
+    assert fs == []
+
+
+def test_cli_strict_and_json(tmp_path):
+    bad = tmp_path / "bad.py"
+    bad.write_text("def k_cache_key(m):\n    return ()\n")
+    assert main([str(bad)]) == 0               # findings alone don't fail
+    assert main([str(bad), "--strict"]) == 1
+    assert main([str(REPO_SRC), "--strict"]) == 0
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.analysis.lint", str(bad), "--json"],
+        capture_output=True, text=True,
+        env={"PYTHONPATH": str(REPO_SRC.parent), "PATH": "/usr/bin:/bin"})
+    assert out.returncode == 0
+    findings = json.loads(out.stdout)
+    assert [f["code"] for f in findings] == ["TH002"]
+    assert findings[0]["line"] == 1
