@@ -15,7 +15,8 @@ from benchmarks import (dispatch_bench, e2e_slo_attainment,
                         fig3_batch_utilization,
                         fig4_time_multiplexing, fig5_spatial_variance,
                         fig6_coalescing, fig7_clustering,
-                        moe_coalescing_bench, plan_cache_bench,
+                        moe_coalescing_bench, multi_device_bench,
+                        plan_cache_bench,
                         prefill_coalescing_bench, rnn_gemv_coalescing,
                         roofline_report, stacked_depth_bench,
                         table1_autotuning)
@@ -35,6 +36,7 @@ MODULES = [
     ("dispatch", dispatch_bench),
     ("moe_coalescing", moe_coalescing_bench),
     ("stacked_depth", stacked_depth_bench),
+    ("multi_device", multi_device_bench),
 ]
 
 

@@ -16,6 +16,9 @@ scheduler's internals, so a scheduler bug cannot vouch for itself:
       remaining GEMM-suffix critical path only shrinks).
 
   per-group checks (every coalesced superkernel)
+    * placement      — every op in the group is assigned to the device
+      the group dispatched on (a group can neither mix devices nor run
+      on a device other than its ops' admission-time placement);
     * concurrency    — no two ops of one stream in one group (they would
       execute "simultaneously" against an intra-stream dependence);
     * KV aliasing    — no two ops whose programs declare overlapping
@@ -47,7 +50,8 @@ from repro.core.schedtrace import (ConservationHazard, DeadlineHazard,
                                    DispatchRecord, EnvAliasHazard,
                                    HazardViolation, KVAliasHazard,
                                    OperandIdentityHazard, OpRecord,
-                                   ProgramOrderHazard, ScheduleTrace)
+                                   PlacementHazard, ProgramOrderHazard,
+                                   ScheduleTrace)
 
 # float tolerance for EDF monotonicity: latest_start_t moves by modeled
 # gemm times (~1e-6 s), so absolute 1e-9 cleanly separates real
@@ -96,6 +100,7 @@ class ScheduleCertifier:
     # ------------------------------------------------------------------
     def observe(self, d: DispatchRecord) -> None:
         """Certify one dispatched superkernel group."""
+        self._check_placement(d)
         self._check_group_concurrency(d)
         self._check_kv_alias(d)
         self._check_env_alias(d)
@@ -107,6 +112,20 @@ class ScheduleCertifier:
     # ------------------------------------------------------------------
     # group-level checks
     # ------------------------------------------------------------------
+    def _check_placement(self, d: DispatchRecord) -> None:
+        """Every op of the group must be assigned to the device the group
+        dispatched on: one superkernel launches on one device, and an op
+        must run where admission placed it (its weights live there)."""
+        for op in d.ops:
+            self.checks += 1
+            if op.device != d.device:
+                self._emit(PlacementHazard(
+                    f"{self._who(op)} assigned to device {op.device} was "
+                    f"dispatched in a device-{d.device} group at "
+                    f"t={d.t:.6g}",
+                    detail={"t": d.t, "op": op.op_id,
+                            "devices": (op.device, d.device)}))
+
     def _check_group_concurrency(self, d: DispatchRecord) -> None:
         seen: Dict[int, OpRecord] = {}
         for op in d.ops:
@@ -274,6 +293,19 @@ def check_conservation(trace: ScheduleTrace,
         emit(ConservationHazard(
             f"admitted requests neither retired, evicted nor reported "
             f"unfinished: {lost}", detail={"requests": lost}))
+    # per-device conservation (multi-device meshes): a request must retire
+    # on the device it was admitted to — its KV cache and weights live
+    # there, so a cross-device retire means the placement binding broke
+    # mid-flight. Traces without device records are vacuously balanced.
+    strays = sorted(
+        (r, trace.req_devices[r], trace.retire_devices[r])
+        for r in set(trace.req_devices) & set(trace.retire_devices)
+        if trace.req_devices[r] != trace.retire_devices[r])
+    if strays:
+        emit(PlacementHazard(
+            f"requests retired on a device other than their admission "
+            f"placement (req, admitted, retired): {strays}",
+            detail={"requests": strays}))
     return violations
 
 

@@ -203,11 +203,18 @@ def coalesce_key(op: KernelOp) -> Tuple:
     depths or operand sets (which could not share one scan) never mix.
     The leading "stack" marker keeps stacked buckets disjoint from plain
     (n, k, dtype) triples.
+
+    The op's DEVICE placement leads every key: coalescing is a per-device
+    act (one superkernel launches on one device), so ops assigned to
+    different devices must never share a bucket — enforced structurally
+    here rather than by a scheduler-side filter, and double-checked by the
+    schedule certifier's PlacementHazard. Single-device runs put device=0
+    everywhere, so the grouping is unchanged.
     """
     if op.stack is not None:
-        return ("stack",) + tuple(
+        return ("stack", op.device) + tuple(
             (tag, s.layers, s.n, s.k, s.dtype_bytes) for tag, s in op.stack)
-    return exact_key(op.shape)
+    return (op.device,) + exact_key(op.shape)
 
 
 def group_ops_exact(ops: Sequence[KernelOp]) -> Dict[Tuple, List[KernelOp]]:

@@ -41,7 +41,7 @@ class Coalescer:
     def __init__(self, cost: CostModel, max_group: int = 64,
                  max_waste: float = 0.25,
                  tuned_blocks: Optional[Dict[Tuple, BlockConfig]] = None,
-                 memo: Optional[PlanCache] = None):
+                 memo: Optional[PlanCache] = None, *, device_id: int = 0):
         self.cost = cost
         self.max_group = max_group
         self.max_waste = max_waste
@@ -51,6 +51,13 @@ class Coalescer:
         # decode loop, so (block config, padding waste, modeled latency) are
         # memoized per (ordered shape tuple, shared-operand) key
         self.memo = memo
+        # which mesh device this coalescer plans for. The memo may be
+        # SHARED across the per-device coalescers (one VLIWJit-owned
+        # PlanCache), so the device id is part of every memo key: two
+        # devices with different tenant mixes — or heterogeneous device
+        # profiles — must never serve each other's block plans (see
+        # tests/test_multi_device.py's pre-fix-failing regression).
+        self.device_id = device_id
 
     # ------------------------------------------------------------------
     def block_for(self, shapes: Sequence[GemmShape]) -> BlockConfig:
@@ -109,7 +116,7 @@ class Coalescer:
                                              shared_operand=shared))
 
         if self.memo is not None:
-            key = ("block",
+            key = ("block", self.device_id,
                    tuple((s.m, s.n, s.k, s.dtype_bytes, s.layers)
                          for s in shapes),
                    tuple(tuple((t_, sh.m, sh.layers, sh.n, sh.k,
@@ -119,7 +126,12 @@ class Coalescer:
             block, waste, t = self.memo.get_or_build(key, derive)
         else:
             block, waste, t = derive()
-        return SuperkernelPlan(ops=ops, block=block, est_time_s=t,
+        # cross-device collective charge (MoE expert dispatch/combine for
+        # device-spanning tenants): added OUTSIDE the memo so the memoized
+        # entry stays a pure-GEMM time — the collective depends on the
+        # member ops, not the shape signature
+        coll = max((op.collective_s for op in ops), default=0.0)
+        return SuperkernelPlan(ops=ops, block=block, est_time_s=t + coll,
                                padding_waste=waste, shared_operand=shared)
 
     # ------------------------------------------------------------------

@@ -31,6 +31,10 @@ class Device:
     vmem_bytes: int            # per-core fast memory (VMEM / L1+smem budget)
     launch_overhead_s: float   # fixed per-kernel dispatch cost
     ici_bw: float = 0.0        # bytes/s per link (TPU only)
+    # per-hop interconnect latency for the collective terms (ring step /
+    # all-to-all exchange). GPUs without a declared ici_bw fall back to a
+    # PCIe/NVLink-ish fraction of HBM bandwidth (see CostModel._ici_bw).
+    ici_latency_s: float = 1e-6
     # non-matrix-unit fallback rate (CUDA cores / TPU VPU): tiny-m problems
     # run here without MXU tile-padding losses
     vector_flops: float = 0.0
@@ -283,6 +287,40 @@ class CostModel:
         partitioned = max(self.gemm_time(s, block, co_tenants=K)
                           for s in shapes)
         return max(saturated, partitioned)
+
+    # ------------------------------------------------------------------
+    # cross-device collectives (multi-device mesh serving)
+    # ------------------------------------------------------------------
+    def _ici_bw(self) -> float:
+        """Effective per-link interconnect bandwidth. Devices that declare
+        ``ici_bw`` (TPU ICI) use it; GPU profiles without one fall back to
+        hbm_bw/8 — a PCIe4/NVLink-class fraction, so collective charges
+        stay finite and conservative rather than silently zero."""
+        d = self.device
+        return d.ici_bw if d.ici_bw > 0 else d.hbm_bw / 8.0
+
+    def ring_allreduce_time(self, bytes_per_device: float,
+                            n_devices: int) -> float:
+        """Bandwidth-latency model of a ring all-reduce over ``n_devices``:
+        reduce-scatter + all-gather each move (n-1)/n of the buffer per
+        device and take (n-1) ring steps — the TP psum charge."""
+        if n_devices <= 1 or bytes_per_device <= 0:
+            return 0.0
+        d = self.device
+        steps = 2 * (n_devices - 1)
+        moved = 2.0 * (n_devices - 1) / n_devices * bytes_per_device
+        return moved / self._ici_bw() + steps * d.ici_latency_s
+
+    def all_to_all_time(self, bytes_per_device: float,
+                        n_devices: int) -> float:
+        """Bandwidth-latency model of an all-to-all over ``n_devices``:
+        each device keeps 1/n of its buffer and exchanges the rest in
+        (n-1) pairwise steps — the MoE expert dispatch/combine charge."""
+        if n_devices <= 1 or bytes_per_device <= 0:
+            return 0.0
+        d = self.device
+        moved = (n_devices - 1) / n_devices * bytes_per_device
+        return moved / self._ici_bw() + (n_devices - 1) * d.ici_latency_s
 
     # ------------------------------------------------------------------
     def achieved_tflops(self, shapes: Sequence[GemmShape], t: float) -> float:

@@ -239,7 +239,8 @@ class SuperkernelExecutor:
     # ------------------------------------------------------------------
     def _packed_weights(self, weights: Sequence[jax.Array],
                         wkeys: Sequence[Tuple], K: int, N: int, G_pad: int,
-                        *, shared: bool, group=None) -> jax.Array:
+                        *, shared: bool, group=None,
+                        device: int = 0) -> jax.Array:
         """The group's padded weight operand — [K, N] (shared) or
         [G_pad, K, N] (stacked) — from the persistent cache.
 
@@ -255,9 +256,14 @@ class SuperkernelExecutor:
         generations of full packed-weight copies (each pinning its old
         arrays via the guard) linger until LRU pressure. Both paths count
         in ``weight_invalidations``. On a hit, the bytes of the packed
-        operand are counted as traffic NOT re-staged this tick."""
-        key = ("wpack", "shared" if shared else "stacked", tuple(wkeys),
-               K, N, G_pad, str(weights[0].dtype))
+        operand are counted as traffic NOT re-staged this tick.
+
+        ``device`` is part of the key: per-device op pools share one
+        executor (one VLIWJit-owned weight cache), and a packed operand
+        modeled as resident on device 0's HBM must not satisfy a device-1
+        dispatch — each device stages (and then retains) its own copy."""
+        key = ("wpack", device, "shared" if shared else "stacked",
+               tuple(wkeys), K, N, G_pad, str(weights[0].dtype))
 
         def build() -> jax.Array:
             parts = [jnp.pad(w, ((0, K - w.shape[0]), (0, N - w.shape[1])))
@@ -287,7 +293,7 @@ class SuperkernelExecutor:
     # ------------------------------------------------------------------
     def stacked_operand(self, wkey: Tuple, k: int, n: int, layers: int,
                         weight_fn, guard: Sequence[jax.Array], *,
-                        group=None) -> jax.Array:
+                        group=None, device: int = 0) -> jax.Array:
         """One LAYER-STACKED weight operand — [L, ..., K, N] padded to the
         bucketed (K, N) envelope — from the persistent cache.
 
@@ -307,7 +313,9 @@ class SuperkernelExecutor:
         ``_packed_weights``."""
         K = envelope_bucket(int(k))
         N = envelope_bucket(int(n))
-        key = ("wstack", wkey, int(layers), K, N,
+        # device id keyed for the same reason as _packed_weights: the
+        # shared cache holds one resident stack PER DEVICE
+        key = ("wstack", device, wkey, int(layers), K, N,
                str(guard[0].dtype) if guard else "")
 
         def build() -> jax.Array:
@@ -331,7 +339,8 @@ class SuperkernelExecutor:
     # ------------------------------------------------------------------
     def execute(self, ops: Sequence[KernelOp], *,
                 shared_operand: bool = False,
-                interpret: Optional[bool] = None) -> List[jax.Array]:
+                interpret: Optional[bool] = None,
+                device: int = 0) -> List[jax.Array]:
         """Execute a planned group; returns per-problem outputs in op order.
 
         Each op carries its operand binding (``op.payload`` =
@@ -367,10 +376,11 @@ class SuperkernelExecutor:
         # renames every weight key (new id(params)) still eagerly drops
         # the superseded packed-weight entry (see _packed_weights)
         group = (tuple((ops[i].stream_id, ops[i].tag, ops[i].seq_index)
-                       for i in order), shared_operand)
+                       for i in order), shared_operand, device)
         canon = self.execute_problems(problems, wkeys,
                                       shared_operand=shared_operand,
-                                      interpret=interpret, group=group)
+                                      interpret=interpret, group=group,
+                                      device=device)
         outs: List[Optional[jax.Array]] = [None] * len(ops)
         for pos, i in enumerate(order):
             outs[i] = canon[pos]
@@ -379,7 +389,7 @@ class SuperkernelExecutor:
     def execute_problems(self, problems, wkeys, *,
                          shared_operand: bool = False,
                          interpret: Optional[bool] = None,
-                         group=None) -> List[jax.Array]:
+                         group=None, device: int = 0) -> List[jax.Array]:
         interpret = self.interpret if interpret is None else interpret
         if not self.enabled:
             return execute_superkernel(problems, bm=self.bm,
@@ -407,7 +417,7 @@ class SuperkernelExecutor:
             m_tiles = _tile_bucket([sum(int(a.shape[0]) for a in acts)],
                                    self.bm)
             b = self._packed_weights([w], [wkeys[0]], K, N, 1, shared=True,
-                                     group=group)
+                                     group=group, device=device)
             outs = _dispatch_shared(
                 acts, b, n_real=int(w.shape[1]), m_tiles=m_tiles,
                 bm=self.bm, bn=min(self.bn, N), bk=min(self.bk, K),
@@ -416,7 +426,7 @@ class SuperkernelExecutor:
             K = envelope_bucket(max(int(w.shape[0]) for w in ws))
             N = envelope_bucket(max(int(w.shape[1]) for w in ws))
             b = self._packed_weights(ws, wkeys, K, N, G_pad, shared=False,
-                                     group=group)
+                                     group=group, device=device)
             n_real = [int(w.shape[1]) for w in ws]
             n_real += [n_real[0]] * (G_pad - G)
             m_tiles = _tile_bucket([int(a.shape[0]) for a in acts], self.bm)

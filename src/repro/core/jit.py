@@ -295,6 +295,10 @@ class KernelProgram:
     # concurrent writers to one KV row). Empty for raw programs — no
     # declared rows, no possible overlap.
     kv_writes: Tuple = ()
+    # mesh placement: the device this program's ops execute on. Stamped by
+    # JitSession.admit from the session's device id — one session drives
+    # exactly one device's timeline, so a program never spans devices.
+    device: int = 0
     # instance identity for trace records / program-order certification
     # (seq_index resets across a stream's successive step programs, so
     # (stream, seq) alone cannot express cross-program ordering)
@@ -1690,6 +1694,14 @@ class JitStats:
     # would otherwise read as a clean pass.
     hazard_checks: int = 0
     hazard_violations: int = 0
+    # multi-device mesh counters: modeled cross-device collective seconds
+    # charged (MoE expert dispatch/combine for device-spanning tenants —
+    # nonzero iff some tenant's expert span > 1), and dispatched groups
+    # that actually coalesced (>1 op) — per-session this is a per-DEVICE
+    # count, which the multi-device bench requires to be nonzero on every
+    # device (a mesh where one device never coalesces is misplaced).
+    collective_time_s: float = 0.0
+    coalesced_groups: int = 0
 
     @property
     def mean_group(self) -> float:
@@ -1732,17 +1744,38 @@ class JitSession:
     shared virtual clock one scheduler decision (``tick``) at a time.
     """
 
-    def __init__(self, jit: "VLIWJit", record_trace: bool = False):
+    def __init__(self, jit: "VLIWJit", record_trace: bool = False, *,
+                 device: int = 0, cost: Optional[CostModel] = None,
+                 trace: Optional[ScheduleTrace] = None):
         self.jit = jit
         self.stats = JitStats()
-        self.sched = OoOScheduler(jit.cost, jit.coalescer, jit.sched_cfg)
+        # mesh placement: one session drives ONE device's virtual timeline.
+        # The scheduler and coalescer are per-device views over the shared
+        # JIT state — the coalescer plans with this device's cost model and
+        # keys the SHARED block-plan memo with the device id, and the
+        # scheduler owns this device's ready pool / EDF anchor set. The
+        # default (device 0, jit.cost) is exactly the single-device setup.
+        self.device = device
+        self.cost = cost if cost is not None else jit.cost
+        coalescer = jit.coalescer if device == 0 and cost is None else \
+            Coalescer(self.cost, max_group=jit.max_group,
+                      memo=jit.block_plans, device_id=device)
+        self.sched = OoOScheduler(self.cost, coalescer, jit.sched_cfg,
+                                  device=device)
+        # expert-parallel span per stream (tenant): streams whose MoE
+        # expert weights span >1 devices pay the all-to-all collective
+        # charge on every expert GEMM (set by the engine from the
+        # placement policy; default 1 = local, no charge).
+        self.stream_span: Dict[int, int] = {}
         # dispatch trace for the schedule certifier (repro.analysis):
         # admissions, waits and per-op dispatch records, appended BEFORE
         # each superkernel executes so a crash mid-dispatch still leaves
         # the offending group on the trace. None (default) records
         # nothing — zero steady-state overhead unless certification is on.
-        self.trace: Optional[ScheduleTrace] = \
-            ScheduleTrace() if record_trace else None
+        # An explicit ``trace`` shares one audit log across the per-device
+        # sessions of a mesh run (the certifier sees the whole fleet).
+        self.trace: Optional[ScheduleTrace] = trace if trace is not None \
+            else (ScheduleTrace() if record_trace else None)
         # pending GEMM per program: op_id -> (program, stage)
         self.live: Dict[int, Tuple[KernelProgram, GemmStage]] = {}
         self._done: List[KernelProgram] = []
@@ -1768,6 +1801,13 @@ class JitSession:
         the stagger/WAIT branch on the real path."""
         self.sched.next_arrival_t = t
 
+    def set_stream_span(self, stream_id: int, span: int) -> None:
+        """Declare a stream's expert-parallel device span (placement
+        policy's ``TenantPlacement.expert_span``). Spans > 1 charge the
+        MoE expert dispatch/combine all-to-all on every expert GEMM the
+        stream declares from now on."""
+        self.stream_span[stream_id] = span
+
     def admit(self, prog: KernelProgram) -> None:
         """Add a program to the live pool (legal at any point in time)."""
         # mid-flight = joining other streams' live ops after execution has
@@ -1775,16 +1815,31 @@ class JitSession:
         # just the starting pool
         if self.live and self._started:
             self.stats.mid_flight_admissions += 1
+        prog.device = self.device     # placement binds at admission
         if self.trace is not None:
             self.trace.prog_admits.append(ProgramAdmit(
                 prog_uid=prog.uid, stream=prog.stream_id, kind=prog.kind,
                 req_ids=tuple(r for r, _ in prog.req_deadlines),
-                kv_writes=tuple(prog.kv_writes)))
+                kv_writes=tuple(prog.kv_writes), device=self.device))
         st = prog.advance_glue()
         if st is None:            # pure-glue program: completes immediately
             self._done.append(prog)
             return
         self._push_op(prog, st)
+
+    def _expert_collective_s(self, stream_id: int, m: int, k: int,
+                             layers: int = 1, dtype_bytes: int = 2) -> float:
+        """All-to-all charge for one expert-FFN trio of a device-spanning
+        MoE stream: dispatch scatters the [m, k] expert activations to the
+        shards, combine gathers the outputs back — 2·m·k bytes round trip
+        per scanned layer. Charged ONCE per trio (on the gate GEMM) so a
+        gate/up/down triple is not triple-billed. Local streams
+        (span <= 1) pay nothing."""
+        span = self.stream_span.get(stream_id, 1)
+        if span <= 1:
+            return 0.0
+        return self.cost.all_to_all_time(
+            2.0 * layers * m * k * dtype_bytes, span)
 
     def _push_op(self, prog: KernelProgram, st: Stage) -> None:
         if isinstance(st, StackedGemmStage):
@@ -1805,14 +1860,20 @@ class JitSession:
         # carry operand bindings on the op (declarative dispatch payload)
         op.payload = (a, w, st.weight_key)
         op.prog_uid = prog.uid
+        op.device = self.device
+        if st.tag == "expert_gate":
+            op.collective_s = self._expert_collective_s(
+                prog.stream_id, op.shape.m, op.shape.k)
         # per-request identity: the scheduler accounts SLO demotions per
         # request id, not per (stream, deadline) of the batch anchor
         op.req_deadlines = prog.req_deadlines
         if math.isfinite(op.deadline_t):
             # EDF anchor = deadline minus the program's remaining critical
-            # path, so upstream stages inherit the urgency of the whole step
+            # path (plus any collective charge), so upstream stages inherit
+            # the urgency of the whole step
             op.latest_start_t = op.deadline_t \
-                - prog.remaining_gemm_time(self.jit.cost, prog.pc)
+                - prog.remaining_gemm_time(self.cost, prog.pc) \
+                - op.collective_s
         self.live[op.op_id] = (prog, st)
         self.sched.push([op])
 
@@ -1844,10 +1905,21 @@ class JitSession:
                       tuple(a for od in st.operands for a in od.guard),
                       st.weight_key)
         op.prog_uid = prog.uid
+        op.device = self.device
+        # expert-parallel collective: charge the first expert_gate operand
+        # of the scanned body (one dispatch+combine per layer of the trio)
+        for od in st.operands:
+            if od.tag == "expert_gate":
+                op.collective_s = self._expert_collective_s(
+                    prog.stream_id, od.shape.m, od.shape.k,
+                    layers=od.shape.layers,
+                    dtype_bytes=od.shape.dtype_bytes)
+                break
         op.req_deadlines = prog.req_deadlines
         if math.isfinite(op.deadline_t):
             op.latest_start_t = op.deadline_t \
-                - prog.remaining_gemm_time(self.jit.cost, prog.pc)
+                - prog.remaining_gemm_time(self.cost, prog.pc) \
+                - op.collective_s
         self.live[op.op_id] = (prog, st)
         self.sched.push([op])
 
@@ -1866,7 +1938,7 @@ class JitSession:
             weight_key=op_weight_key(op), weight_id=op_weight_identity(op),
             kv_writes=tuple(prog.kv_writes),
             env_writes=tuple(writes) if writes is not None else ("*",),
-            env_id=id(prog.env))
+            env_id=id(prog.env), device=op.device)
 
     def _run_stacked(self, ops, completed) -> None:
         """Dispatch a coalesced group of layer-stacked body ops: pack each
@@ -1897,7 +1969,8 @@ class JitSession:
                         + od.weight_key[2:]
                     padded[od.tag] = ex.stacked_operand(
                         od.weight_key, od.shape.k, od.shape.n,
-                        od.shape.layers, od.weight_fn, od.guard, group=group)
+                        od.shape.layers, od.weight_fn, od.guard,
+                        group=group, device=op.device)
                 # collapse the per-operand cache accesses into ONE hit/miss
                 # event per dispatch (miss iff any operand had to repack)
                 # so the DispatchStats invariant hits + misses == dispatches
@@ -1943,37 +2016,45 @@ class JitSession:
             # executor's shared-operand identity guard) still leaves the
             # offending group on the trace for the certifier's post-mortem
             self.trace.dispatches.append(DispatchRecord(
-                t=now, shared_operand=shared,
+                t=now, shared_operand=shared, device=self.device,
                 ops=tuple(self._op_record(op) for op in plan.ops)))
+        # cross-device collective charge of the group (expert-parallel MoE
+        # dispatch/combine): one all-to-all covers the group — it is a
+        # per-layer exchange, not per-member — so charge the max, exactly
+        # as Coalescer.plan does for est_time_s
+        coll = max((op.collective_s for op in plan.ops), default=0.0)
         if stacked:
             # coalesce_key keeps stacked and plain ops in disjoint buckets
             assert all(op.stack is not None for op in plan.ops)
             serial_shapes = [s for op in plan.ops for _, s in op.stack]
             outs = None
-            t = plan.est_time_s
+            t = plan.est_time_s          # already includes the collective
         else:
             # the jitted dispatch fast path (core/dispatch.py): persistent
             # packed weights + bucketed envelopes + compiled
             # pack/kernel/unpack
             outs = self.jit.executor.execute(plan.ops,
-                                             shared_operand=shared)
+                                             shared_operand=shared,
+                                             device=self.device)
             serial_shapes = [o.shape for o in plan.ops]
-            t = self.jit.cost.coalesced_time(serial_shapes, plan.block,
-                                             shared_operand=shared)
+            t = self.cost.coalesced_time(serial_shapes, plan.block,
+                                         shared_operand=shared) + coll
         stats = self.stats
         stats.superkernels += 1
         stats.ops_executed += len(plan.ops)
         stats.groups.add(len(plan.ops))
         stats.padding_waste.add(plan.padding_waste)
         stats.shared_dispatches += int(shared)
+        stats.collective_time_s += coll
+        stats.coalesced_groups += int(len(plan.ops) > 1)
         if len({op.stream_id for op in plan.ops}) > 1:
             if any(op.op_kind == "prefill" for op in plan.ops):
                 stats.prefill_coalesced += 1
             if any(is_expert_op(op) for op in plan.ops):
                 stats.expert_coalesced += 1
         stats.modeled_time_s += t
-        stats.modeled_serial_time_s += self.jit.cost.time_multiplexed(
-            serial_shapes, plan.block)
+        stats.modeled_serial_time_s += self.cost.time_multiplexed(
+            serial_shapes, plan.block) + coll
         if stacked:
             self._run_stacked(plan.ops, completed)
         else:
@@ -2009,6 +2090,7 @@ class VLIWJit:
         # plan_capacity=0 disables both (the rebuild-per-step baseline).
         self.plan_cache = PlanCache(plan_capacity)
         self.block_plans = PlanCache(plan_capacity * 4)
+        self.max_group = max_group
         self.coalescer = Coalescer(self.cost, max_group=max_group,
                                    memo=self.block_plans)
         self.sched_cfg = sched_cfg
@@ -2026,13 +2108,19 @@ class VLIWJit:
                                       byte_capacity=weight_budget_bytes)
         self.executor = SuperkernelExecutor(self.weight_cache, bm=bm)
 
-    def session(self, record_trace: bool = False) -> JitSession:
+    def session(self, record_trace: bool = False, *, device: int = 0,
+                cost: Optional[CostModel] = None,
+                trace: Optional[ScheduleTrace] = None) -> JitSession:
         """Open an admission-open event-loop session (engine entry point).
 
         ``record_trace=True`` makes the session keep a ``ScheduleTrace``
         (admissions, waits, per-op dispatch records) for the schedule
-        certifier — the engine's ``certify=True`` path."""
-        return JitSession(self, record_trace=record_trace)
+        certifier — the engine's ``certify=True`` path. Multi-device
+        serving opens one session PER mesh device (``device``/``cost``
+        from the ``DeviceSet``) sharing this JIT's caches — keyed with the
+        device id — and optionally one shared ``trace``."""
+        return JitSession(self, record_trace=record_trace, device=device,
+                          cost=cost, trace=trace)
 
     def run(self, programs: Sequence[KernelProgram],
             arrivals: Optional[Sequence[Arrival]] = None,

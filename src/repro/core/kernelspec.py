@@ -81,6 +81,18 @@ class KernelOp:
     # one program ran in order AND that two programs of one stream never
     # interleaved.
     prog_uid: int = dataclasses.field(default=0, compare=False)
+    # placement: which modeled device of the mesh this op is assigned to.
+    # Bound at admission (distributed/placement.py via JitSession.device)
+    # and immutable afterwards — ops never coalesce across devices
+    # (clustering.coalesce_key includes it) and the schedule certifier
+    # rejects a dispatch on any other device (PlacementHazard).
+    device: int = 0
+    # modeled cross-device collective charge attached to this op (seconds):
+    # MoE expert dispatch/combine all-to-all for tenants whose expert dim
+    # spans devices, TP psum all-reduce when enabled. Charged against EDF
+    # slack (latest_start_t) and added to the group's plan estimate — it is
+    # NOT part of the memoized pure-GEMM block-plan time.
+    collective_s: float = dataclasses.field(default=0.0, compare=False)
 
     @property
     def slack(self) -> float:

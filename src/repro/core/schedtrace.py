@@ -38,6 +38,9 @@ Hazard classes (the certifier's rejection taxonomy; see
     admitted request neither retired, was evicted, nor surfaced in
     ``ServeReport.unfinished``; or a request retired/was admitted more
     than once.
+  * ``PlacementHazard``      — multi-device placement broke: a coalesced
+    group mixed ops assigned to different devices, or an op was
+    dispatched on a device other than its admission-time assignment.
 """
 from __future__ import annotations
 
@@ -83,6 +86,10 @@ class ConservationHazard(HazardViolation):
     kind = "conservation"
 
 
+class PlacementHazard(HazardViolation):
+    kind = "placement"
+
+
 @dataclasses.dataclass
 class OpRecord:
     """One op's identity inside a dispatched superkernel group.
@@ -107,15 +114,21 @@ class OpRecord:
     kv_writes: Tuple = ()                 # (("kv", owner, slot), ...)
     env_writes: Tuple = ()                # declared write keys, or ("*",)
     env_id: int = 0
+    device: int = 0                       # admission-time device placement
 
 
 @dataclasses.dataclass
 class DispatchRecord:
-    """One superkernel dispatch: the coalesced group at virtual time t."""
+    """One superkernel dispatch: the coalesced group at virtual time t.
+
+    ``device`` is where the group actually launched — the certifier's
+    placement check requires every member op's assigned device to equal
+    it (a group can neither mix devices nor run somewhere else)."""
 
     t: float
     ops: Tuple[OpRecord, ...]
     shared_operand: bool = False
+    device: int = 0
 
 
 @dataclasses.dataclass
@@ -127,6 +140,7 @@ class ProgramAdmit:
     kind: str
     req_ids: Tuple[int, ...] = ()
     kv_writes: Tuple = ()
+    device: int = 0                       # admission-time device placement
 
 
 @dataclasses.dataclass
@@ -150,3 +164,10 @@ class ScheduleTrace:
         default_factory=list)          # (req_id, t)
     evicted: Set[int] = dataclasses.field(default_factory=set)
     unfinished: Set[int] = dataclasses.field(default_factory=set)
+    # multi-device request placement: which device each request was
+    # admitted on / retired from. Kept as separate dicts (not widened
+    # tuples in req_admits/req_retires) so single-device consumers of the
+    # 2-tuple schema are untouched; the per-device conservation check
+    # requires retire_devices[r] == req_devices[r] for every request.
+    req_devices: dict = dataclasses.field(default_factory=dict)
+    retire_devices: dict = dataclasses.field(default_factory=dict)

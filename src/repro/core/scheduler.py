@@ -55,10 +55,17 @@ class SchedulerConfig:
 
 class OoOScheduler:
     def __init__(self, cost: CostModel, coalescer: Coalescer,
-                 cfg: SchedulerConfig = SchedulerConfig()):
+                 cfg: SchedulerConfig = SchedulerConfig(), *,
+                 device: int = 0):
         self.cost = cost
         self.coalescer = coalescer
         self.cfg = cfg
+        # mesh placement: this scheduler instance owns ONE device's op pool
+        # (its own ready queue, EDF anchor set and virtual-clock free
+        # instant). Multi-device serving runs N of these side by side —
+        # ``push`` asserts every op was placed here, so a placement bug
+        # surfaces at admission rather than as a certifier hazard later.
+        self.device = device
         self.ready: List[KernelOp] = []
         # per-stream remaining critical path (sum of modeled op times)
         self._stream_remaining: Dict[int, float] = {}
@@ -96,17 +103,26 @@ class OoOScheduler:
     # queue management
     # ------------------------------------------------------------------
     def annotate_stream(self, ops: Sequence[KernelOp]) -> None:
-        """Compute per-op latest-start deadlines for one stream's program."""
+        """Compute per-op latest-start deadlines for one stream's program.
+
+        Cross-device collective charges (``KernelOp.collective_s``) are
+        part of the critical path behind the op, so they tighten the
+        latest start exactly like GEMM time."""
         suffix = 0.0
-        times = [self.cost.gemm_time(op.shape) for op in ops]
+        times = [self.cost.gemm_time(op.shape) + op.collective_s
+                 for op in ops]
         for op, t in zip(reversed(list(ops)), reversed(times)):
             suffix += t
             op.latest_start_t = op.deadline_t - suffix
 
     def push(self, ops: Sequence[KernelOp]) -> None:
         for op in ops:
+            assert op.device == self.device, (
+                f"op {op.op_id} placed on device {op.device} pushed to "
+                f"device {self.device}'s pool")
             if math.isinf(op.latest_start_t):
-                op.latest_start_t = op.deadline_t - self.cost.gemm_time(op.shape)
+                op.latest_start_t = op.deadline_t - (
+                    self.cost.gemm_time(op.shape) + op.collective_s)
         self.ready.extend(ops)
 
     def pending(self) -> int:

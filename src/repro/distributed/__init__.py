@@ -1,8 +1,42 @@
+"""Distribution layer: sharding rules + multi-device serving placement.
+
+Two complementary halves:
+
+  * ``sharding.py`` — logical-axis sharding rules → ``NamedSharding``
+    pytrees for SPMD execution of ONE model over a mesh (TP FFN/vocab,
+    expert-parallel MoE, sequence-sharded KV).
+  * ``placement.py`` — tenant→device placement for the multi-tenant
+    serving engine's modeled mesh: ``DeviceSet`` (ordered device
+    profiles + memoized per-device cost models), ``PlacementPolicy``
+    (greedy least-loaded bin-packing over modeled steady-state load,
+    deterministic), and the collective-charge helpers that price MoE
+    expert parallelism into the scheduler's EDF slack.
+
+Placement model (what binds when):
+
+  * **at admission** — a tenant's home device and expert span bind at its
+    FIRST admission and never change; its weights, KV caches and every
+    op it ever declares live on that device. Expert-parallel MoE tenants
+    (mesh size divides the expert count — the same divisibility rule as
+    ``sharding.py``) span the mesh with their expert weights and pay an
+    all-to-all dispatch/combine charge per expert GEMM.
+  * **per tick** — each device runs its own DISPATCH/WAIT decision, EDF
+    anchor set and coalesced-group formation over its own op pool; ops
+    never coalesce across devices (``clustering.coalesce_key`` leads
+    with the device id) and the schedule certifier rejects any group
+    that mixes devices or runs off its assignment (``PlacementHazard``).
+"""
+from repro.distributed.placement import (DeviceSet, PlacementPolicy,
+                                         TenantPlacement,
+                                         expert_collective_s,
+                                         steady_state_load)
 from repro.distributed.sharding import (batch_shardings, cache_shardings,
                                         fsdp_axes, opt_state_shardings,
                                         param_shardings)
 
 __all__ = [
-    "batch_shardings", "cache_shardings", "fsdp_axes",
-    "opt_state_shardings", "param_shardings",
+    "DeviceSet", "PlacementPolicy", "TenantPlacement",
+    "batch_shardings", "cache_shardings", "expert_collective_s",
+    "fsdp_axes", "opt_state_shardings", "param_shardings",
+    "steady_state_load",
 ]

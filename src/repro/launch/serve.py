@@ -34,6 +34,11 @@ def main() -> None:
     ap.add_argument("--max-new-tokens", type=int, default=4)
     ap.add_argument("--slo-ms", type=float, default=5.0)
     ap.add_argument("--bursty", action="store_true")
+    ap.add_argument("--num-devices", type=int, default=1,
+                    help="serve on an N-device modeled mesh (vliw mode): "
+                         "tenants are bin-packed onto per-device timelines "
+                         "at admission; expert-parallel MoE tenants span "
+                         "the mesh and pay the all-to-all collective")
     ap.add_argument("--certify", action="store_true",
                     help="record a ScheduleTrace and run the hazard "
                          "certifier per tick (vliw mode); raises on the "
@@ -59,7 +64,11 @@ def main() -> None:
         tenants = [Tenant(n, *models[a], cache_len=max(
             32, args.prompt_len + args.max_new_tokens + 1), max_batch=4)
             for n, a in zip(names, args.tenants)]
-        eng = ServingEngine(tenants, mode=mode, certify=args.certify)
+        # baseline modes define single-device round semantics; the mesh is
+        # a vliw-engine feature
+        n_dev = args.num_devices if mode == "vliw" else 1
+        eng = ServingEngine(tenants, mode=mode, certify=args.certify,
+                            num_devices=n_dev)
         rep = eng.run(copy.deepcopy(trace))
         line = (f"{mode:8s} modeled={rep.modeled_time_s*1e3:8.3f} ms  "
                 f"mean_lat={rep.mean_latency*1e3:7.3f} ms  "
@@ -77,6 +86,29 @@ def main() -> None:
                 line += (f"  [certified: checks={rep.jit.hazard_checks} "
                          f"violations={rep.jit.hazard_violations}]")
         print(line)
+        if rep.jit and rep.num_devices > 1:
+            # per-device mesh breakdown: utilization + coalesced groups
+            # (from the recorded trace when --certify) + placement
+            groups = {d: [0, 0] for d in range(rep.num_devices)}
+            if eng.last_trace is not None:
+                for rec in eng.last_trace.dispatches:
+                    groups[rec.device][0] += 1
+                    groups[rec.device][1] += int(len(rec.ops) > 1)
+            homed = {d: [] for d in range(rep.num_devices)}
+            for name, pl in eng.placement.assignments.items():
+                homed[pl.device].append(
+                    name + (f"(x{pl.expert_span})" if pl.expert_span > 1
+                            else ""))
+            print(f"  mesh: {rep.num_devices} devices, "
+                  f"skew={rep.device_skew:.2f}, "
+                  f"collective={rep.jit.collective_time_s*1e6:.1f} us")
+            for dd in range(rep.num_devices):
+                gline = (f"groups={groups[dd][0]} "
+                         f"coalesced={groups[dd][1]}  "
+                         if eng.last_trace is not None else "")
+                print(f"    dev{dd}: util={rep.device_util[dd]:5.1%}  "
+                      f"busy={rep.device_busy_s[dd]*1e3:7.3f} ms  "
+                      f"{gline}tenants={','.join(homed[dd]) or '-'}")
 
 
 if __name__ == "__main__":

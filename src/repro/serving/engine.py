@@ -24,25 +24,40 @@ Three execution modes, mirroring the paper's comparison end-to-end:
                 into per-op ``latest_start_t`` for EDF anchoring and
                 eviction of already-missed stragglers.
 
+In vliw mode the engine can drive an N-device modeled mesh
+(``num_devices`` / an explicit ``DeviceSet``): each tenant is bound to a
+home device at its FIRST admission (``distributed/placement.py`` — greedy
+least-loaded bin-packing over modeled steady-state load) and every op it
+ever declares runs on that device's own virtual timeline — one
+``JitSession`` (scheduler + coalescer + free instant + EDF anchor set)
+per device, all sharing one ``VLIWJit``'s plan/weight caches (keyed with
+the device id) and one ``ScheduleTrace``. Ops never coalesce across
+devices. Expert-parallel MoE tenants additionally SPAN the mesh with
+their expert weights when the mesh size divides the expert count; their
+ops stay on the home timeline but carry an all-to-all dispatch/combine
+charge in EDF slack and plan estimates.
+
 Arch-support matrix (which path each tenant takes in vliw mode):
 
-  ==========  =====================  ==========================
-  arch_type   decode step            prompt prefill
-  ==========  =====================  ==========================
-  dense       KernelProgram          declared prefill program
+  ==========  =====================  ==========================  ===============
+  arch_type   decode step            prompt prefill              mesh placement
+  ==========  =====================  ==========================  ===============
+  dense       KernelProgram          declared prefill program    home device
                                      (>= prefill_declare_min;
                                      analytic below it)
-  vlm         KernelProgram          analytic (patch projector)
-  moe         KernelProgram          analytic
-              (router glue +
-              per-expert GEMMs)
-  ssm         KernelProgram          analytic
+  vlm         KernelProgram          analytic (patch projector)  home device
+  moe         KernelProgram          analytic                    home device;
+              (router glue +                                     experts span
+              per-expert GEMMs)                                  mesh when
+                                                                 N | n_experts
+                                                                 (+ all-to-all)
+  ssm         KernelProgram          analytic                    home device
               (scan recurrence glue)
-  hybrid      monolithic batched     analytic
-  audio       monolithic batched     analytic
-  int8-KV     monolithic batched     analytic
+  hybrid      monolithic batched     analytic                    home device
+  audio       monolithic batched     analytic                    home device
+  int8-KV     monolithic batched     analytic                    home device
   (any arch)
-  ==========  =====================  ==========================
+  ==========  =====================  ==========================  ===============
 
 KernelProgram rows flow through admission → EDF scheduling → clustering →
 coalesced dispatch (``JitStats.nondense_programs`` counts the MoE/SSM
@@ -89,6 +104,8 @@ from repro.core.jit import (JitStats, KernelProgram, VLIWJit,
                             ssm_program_cache_key)
 from repro.core.kernelspec import gemm_population
 from repro.core.scheduler import SchedulerConfig
+from repro.core.schedtrace import ScheduleTrace
+from repro.distributed.placement import DeviceSet, PlacementPolicy
 from repro.models.model import Model
 from repro.serving.workload import ServeRequest
 
@@ -122,6 +139,29 @@ class ServeReport:
     modeled_time_s: float
     wall_time_s: float
     jit: Optional[JitStats] = None
+    # multi-device vliw runs only (None otherwise): index d = mesh slot d
+    device_time_s: Optional[List[float]] = None   # final per-device clock
+    device_busy_s: Optional[List[float]] = None   # modeled busy time charged
+
+    @property
+    def num_devices(self) -> int:
+        return len(self.device_time_s) if self.device_time_s else 1
+
+    @property
+    def device_util(self) -> List[float]:
+        """Per-device busy fraction of the fleet makespan — the utilization
+        skew the placement policy is judged on."""
+        if not self.device_busy_s or not self.modeled_time_s:
+            return []
+        return [b / self.modeled_time_s for b in self.device_busy_s]
+
+    @property
+    def device_skew(self) -> float:
+        """max/mean per-device busy time; 1.0 = perfectly balanced."""
+        if not self.device_busy_s:
+            return 1.0
+        mean = sum(self.device_busy_s) / len(self.device_busy_s)
+        return max(self.device_busy_s) / mean if mean > 0 else 1.0
 
     @property
     def finished(self) -> List[ServeRequest]:
@@ -227,7 +267,9 @@ class ServingEngine:
                  arrival_alpha: float = 0.2,
                  weight_budget_bytes: Optional[int] = 1 << 30,
                  stacked_layers: bool = True,
-                 certify: bool = False):
+                 certify: bool = False,
+                 num_devices: int = 1,
+                 devices: Optional[DeviceSet] = None):
         assert mode in ("time", "batched", "vliw")
         self.tenants = {t.name: t for t in tenants}
         self.mode = mode
@@ -270,6 +312,29 @@ class ServingEngine:
         self.predict_arrivals = predict_arrivals
         self._arrival_pred = ArrivalPredictor(alpha=arrival_alpha)
         self.cost = cost or CostModel(TPUV5E)
+        # the modeled mesh: N virtual device timelines, each with its own
+        # scheduler/coalescer (ops never coalesce across devices) sharing
+        # one VLIWJit's plan + weight caches (keyed with the device id).
+        # Tenants bind to a home device at FIRST admission (placement.py).
+        if devices is not None:
+            self.devices = devices
+            if cost is not None and cost.device is devices.devices[0]:
+                devices.bind_cost(0, cost)
+            self.cost = devices.cost(0)
+        else:
+            self.devices = DeviceSet.homogeneous(self.cost.device,
+                                                 max(1, int(num_devices)))
+            # mesh slot 0 IS the engine's cost model: downstream memos
+            # (the template GEMM-suffix table) key on cost identity
+            self.devices.bind_cost(0, self.cost)
+        assert len(self.devices) == 1 or mode == "vliw", \
+            "multi-device serving requires mode='vliw' (baseline modes " \
+            "define single-device round semantics)"
+        self.placement = PlacementPolicy(self.devices)
+        # per-device timeline/busy vectors of the last vliw run (ServeReport
+        # device_time_s / device_busy_s)
+        self._last_device_time: Optional[List[float]] = None
+        self._last_device_busy: Optional[List[float]] = None
         # plan_capacity bounds the JIT's persistent plan caches (program
         # templates + block plans); 0 = rebuild per step (baseline).
         # weight_budget_bytes bounds the dispatch executor's packed-weight
@@ -591,163 +656,246 @@ class ServingEngine:
         # previous trace describes a different workload (and would poison
         # observe(), whose last-arrival times now sit past every new t)
         self._arrival_pred.reset()
-        session = self.jit.session(record_trace=self.certify)
-        trace = session.trace
+        n_dev = len(self.devices)
+        # one JitSession PER DEVICE — each owns its scheduler, coalescer,
+        # virtual free instant and EDF anchor set — all sharing one
+        # VLIWJit's plan/block/weight caches (device-id-keyed) and ONE
+        # ScheduleTrace, so the certifier sees the whole mesh. Device 0
+        # reuses the jit's own coalescer (exact single-device behavior).
+        trace = ScheduleTrace() if self.certify else None
+        sessions = [self.jit.session(
+            device=d, cost=None if d == 0 else self.devices.cost(d),
+            trace=trace) for d in range(n_dev)]
         cert = ScheduleCertifier() if trace is not None else None
         certified = 0          # dispatch records already fed to the certifier
         stream_ids = {name: i for i, name in enumerate(self.tenants)}
         id2name = {i: name for name, i in stream_ids.items()}
+        policy = self.placement
+        tenant_dev: Dict[str, int] = {
+            n: p.device for n, p in policy.assignments.items()}
+
+        def dev_of(name: str) -> int:
+            # placement binds ONCE, at the tenant's first admission; an
+            # expert-parallel MoE tenant spanning the mesh registers its
+            # span with its home session, which prices the all-to-all
+            # into every expert GEMM's slack and plan estimate
+            d = tenant_dev.get(name)
+            if d is None:
+                t = self.tenants[name]
+                pl = policy.place(name, t.cfg, batch=t.max_batch)
+                d = tenant_dev[name] = pl.device
+                if pl.expert_span > 1:
+                    sessions[d].set_stream_span(stream_ids[name],
+                                                pl.expert_span)
+            return d
+
+        # route the arrival-sorted trace onto per-device admission queues;
+        # dev_of fires in arrival order of each tenant's FIRST request —
+        # the same binding a lazy per-admission call would make, but the
+        # queues keep one slow device's backlog from head-of-line-blocking
+        # another device's due requests
+        queues: List[List[ServeRequest]] = [[] for _ in range(n_dev)]
+        for req in pending:
+            queues[dev_of(req.tenant)].append(req)
+        pis = [0] * n_dev
+        waiting: List[List[ServeRequest]] = [[] for _ in range(n_dev)]
         inflight: Dict[str, KernelProgram] = {}
-        waiting: List[ServeRequest] = []   # due but not yet admissible
-        now, pi, n_done = 0.0, 0, 0
+        now = [0.0] * n_dev    # per-device virtual clocks
+        busy = [0.0] * n_dev   # analytic charges (dispatch time via stats)
+        n_done = 0
         total = len(pending)
         while True:
             progressed = False
-            # 1. live admission. Dense tenants DECLARE the prompt pass as a
-            #    prefill KernelProgram — its GEMMs join the live op pool and
-            #    coalesce with decode (and other tenants' prefill) traffic;
-            #    the tenant's decode joins only after its completion event.
-            #    Non-dense tenants keep the analytic serialized charge. A
-            #    tenant with a program inflight (or full slots) admits at
-            #    its next step boundary — prefilling under an inflight
-            #    program would be clobbered by its write-back — but other
-            #    tenants' due requests are admitted past it, not blocked
-            #    behind it.
-            while pi < len(pending) and pending[pi].arrival_t <= now:
-                if self.predict_arrivals:
-                    self._arrival_pred.observe(pending[pi].tenant,
-                                               pending[pi].arrival_t)
-                waiting.append(pending[pi])
-                pi += 1
-            still: List[ServeRequest] = []
-            for req in waiting:
-                t = self.tenants[req.tenant]
-                if req.tenant in inflight:
-                    still.append(req)
-                    continue
-                if self._prefill_capable(t) \
-                        and req.prompt_len >= self.prefill_declare_min:
-                    prog = self._declare_prefill(t, req, rng,
-                                                 stream_ids[req.tenant], now)
-                    if prog is None:
+            for d in range(n_dev):
+                session, q, wq = sessions[d], queues[d], waiting[d]
+                # 1. live admission on device d's timeline. Dense tenants
+                #    DECLARE the prompt pass as a prefill KernelProgram —
+                #    its GEMMs join the device's live op pool and coalesce
+                #    with decode (and other tenants' prefill) traffic; the
+                #    tenant's decode joins only after its completion event.
+                #    Non-dense tenants keep the analytic serialized charge.
+                #    A tenant with a program inflight (or full slots)
+                #    admits at its next step boundary, but other tenants'
+                #    due requests are admitted past it, not blocked.
+                while pis[d] < len(q) and q[pis[d]].arrival_t <= now[d]:
+                    if self.predict_arrivals:
+                        self._arrival_pred.observe(q[pis[d]].tenant,
+                                                   q[pis[d]].arrival_t)
+                    wq.append(q[pis[d]])
+                    pis[d] += 1
+                still: List[ServeRequest] = []
+                for req in wq:
+                    t = self.tenants[req.tenant]
+                    if req.tenant in inflight:
+                        still.append(req)
+                        continue
+                    if self._prefill_capable(t) \
+                            and req.prompt_len >= self.prefill_declare_min:
+                        prog = self._declare_prefill(
+                            t, req, rng, stream_ids[req.tenant], now[d])
+                        if prog is None:
+                            still.append(req)  # slots full; retry later
+                            continue
+                        inflight[req.tenant] = prog
+                        session.admit(prog)
+                        if trace is not None:
+                            trace.req_admits.append((req.req_id, now[d]))
+                            trace.req_devices[req.req_id] = d
+                        progressed = True
+                        continue
+                    dt = self._admit(t, req, rng, now[d])
+                    if dt == 0.0 and req.tokens_out is None:
                         still.append(req)  # tenant slots full; retry later
                         continue
-                    inflight[req.tenant] = prog
-                    session.admit(prog)
+                    now[d] += dt
+                    busy[d] += dt
                     if trace is not None:
-                        trace.req_admits.append((req.req_id, now))
+                        trace.req_admits.append((req.req_id, now[d]))
+                        trace.req_devices[req.req_id] = d
+                    if not math.isnan(req.finish_t):
+                        n_done += 1    # retired at admission (single token)
+                        if trace is not None:
+                            trace.req_retires.append((req.req_id, now[d]))
+                            trace.retire_devices[req.req_id] = d
                     progressed = True
-                    continue
-                dt = self._admit(t, req, rng, now)
-                if dt == 0.0 and req.tokens_out is None:
-                    still.append(req)  # tenant slots full; retry later
-                    continue
-                now += dt
-                if trace is not None:
-                    trace.req_admits.append((req.req_id, now))
-                if not math.isnan(req.finish_t):
-                    n_done += 1        # retired at admission (single token)
-                    if trace is not None:
-                        trace.req_retires.append((req.req_id, now))
-                progressed = True
-            waiting = still
-            session.set_next_arrival(
-                self._arrival_pred.predict(now) if self.predict_arrivals
-                else pending[pi].arrival_t if pi < len(pending)
-                else math.inf)
+                waiting[d] = still
+                session.set_next_arrival(
+                    self._arrival_pred.predict(now[d])
+                    if self.predict_arrivals
+                    else q[pis[d]].arrival_t if pis[d] < len(q)
+                    else math.inf)
 
-            # 2. every JIT-capable tenant with live requests keeps a program
-            #    in the pool — admitted between dispatches, not per round
-            for name, t in self.tenants.items():
-                if self._jit_capable(t) and name not in inflight \
-                        and t.active_slots():
-                    prog = self._build_program(t, stream_ids[name], now)
-                    if t.cfg.arch_type in ("moe", "ssm"):
-                        session.stats.nondense_programs += 1
-                    inflight[name] = prog
-                    session.admit(prog)
-                    progressed = True
+                # 2. every JIT-capable tenant homed here with live requests
+                #    keeps a program in this device's pool — admitted
+                #    between dispatches, not per round
+                for name, t in self.tenants.items():
+                    if tenant_dev.get(name) != d:
+                        continue
+                    if self._jit_capable(t) and name not in inflight \
+                            and t.active_slots():
+                        prog = self._build_program(t, stream_ids[name],
+                                                   now[d])
+                        if t.cfg.arch_type in ("moe", "ssm"):
+                            session.stats.nondense_programs += 1
+                        inflight[name] = prog
+                        session.admit(prog)
+                        progressed = True
 
-            # 3. one scheduler decision on the shared virtual clock
-            ev = session.tick(now)
-            if cert is not None:
-                # certify this tick's new dispatches at the tick they
-                # happened — a HazardViolation raises right here, with the
-                # offending group as the last trace record
-                for d in trace.dispatches[certified:]:
-                    cert.observe(d)
-                certified = len(trace.dispatches)
-            progressed |= ev.kind != "idle"
-            now = max(now, ev.t)
-            for prog in ev.completed:
-                t = self.tenants[id2name[prog.stream_id]]
-                del inflight[id2name[prog.stream_id]]
-                if prog.kind == "prefill":
-                    now, done = self._on_prefill_complete(t, prog, now)
-                    n_done += done
-                    if done and trace is not None:
-                        trace.req_retires.append(
-                            (prog.env["req"].req_id, now))
-                    continue
-                t.cache = prog.env["cache"]
-                self._consume(t, prog.env["logits"][:, None, :])
-                # KV streaming charged at the ACTIVE batch size: idle slots
-                # have no cache rows to read, so charging max_batch
-                # over-billed partially-filled tenants
-                now += self._attn_time(t.cfg,
-                                       max(len(t.active_slots()), 1))
-                retired = self._retire(t, now)
-                n_done += len(retired)
-                if trace is not None:
-                    trace.req_retires.extend(
-                        (r.req_id, now) for r in retired)
-
-            # 4. non-JIT tenants interleave monolithic batched steps
-            for t in self.tenants.values():
-                if not self._jit_capable(t) and t.active_slots():
-                    now += self._tenant_batched_step(t)
-                    retired = self._retire(t, now)
+                # 3. one scheduler decision on device d's virtual clock
+                ev = session.tick(now[d])
+                if cert is not None:
+                    # certify this tick's new dispatches at the tick they
+                    # happened — a HazardViolation raises right here, with
+                    # the offending group as the last trace record. The
+                    # trace is shared, so records from every device flow
+                    # through the same certifier (placement checks included)
+                    for dr in trace.dispatches[certified:]:
+                        cert.observe(dr)
+                    certified = len(trace.dispatches)
+                progressed |= ev.kind != "idle"
+                now[d] = max(now[d], ev.t)
+                for prog in ev.completed:
+                    t = self.tenants[id2name[prog.stream_id]]
+                    del inflight[id2name[prog.stream_id]]
+                    if prog.kind == "prefill":
+                        t0 = now[d]
+                        now[d], done = self._on_prefill_complete(
+                            t, prog, now[d])
+                        busy[d] += now[d] - t0
+                        n_done += done
+                        if done and trace is not None:
+                            trace.req_retires.append(
+                                (prog.env["req"].req_id, now[d]))
+                            trace.retire_devices[prog.env["req"].req_id] = d
+                        continue
+                    t.cache = prog.env["cache"]
+                    self._consume(t, prog.env["logits"][:, None, :])
+                    # KV streaming charged at the ACTIVE batch size: idle
+                    # slots have no cache rows to read, so charging
+                    # max_batch over-billed partially-filled tenants
+                    attn = self._attn_time(t.cfg,
+                                           max(len(t.active_slots()), 1))
+                    now[d] += attn
+                    busy[d] += attn
+                    retired = self._retire(t, now[d])
                     n_done += len(retired)
                     if trace is not None:
                         trace.req_retires.extend(
-                            (r.req_id, now) for r in retired)
-                    progressed = True
+                            (r.req_id, now[d]) for r in retired)
+                        for r in retired:
+                            trace.retire_devices[r.req_id] = d
 
-            if n_done >= total and not session.live and pi >= len(pending) \
-                    and not waiting:
+                # 4. non-JIT tenants homed here interleave monolithic
+                #    batched steps on this device's clock
+                for name, t in self.tenants.items():
+                    if tenant_dev.get(name) != d:
+                        continue
+                    if not self._jit_capable(t) and t.active_slots():
+                        dt = self._tenant_batched_step(t)
+                        now[d] += dt
+                        busy[d] += dt
+                        retired = self._retire(t, now[d])
+                        n_done += len(retired)
+                        if trace is not None:
+                            trace.req_retires.extend(
+                                (r.req_id, now[d]) for r in retired)
+                            for r in retired:
+                                trace.retire_devices[r.req_id] = d
+                        progressed = True
+
+            if n_done >= total \
+                    and not any(s.live for s in sessions) \
+                    and all(pis[d] >= len(queues[d]) for d in range(n_dev)) \
+                    and not any(waiting):
                 break
             if not progressed:
-                if pi < len(pending):
-                    now = max(now, pending[pi].arrival_t)
+                advanced = False
+                for d in range(n_dev):
+                    # idle device: its clock jumps to its next arrival
+                    if pis[d] < len(queues[d]) \
+                            and now[d] < queues[d][pis[d]].arrival_t:
+                        now[d] = queues[d][pis[d]].arrival_t
+                        advanced = True
+                if advanced:
                     continue
-                if not waiting:
+                if not any(waiting):
                     break
-                # stall guard: pending is exhausted, every waiting request
-                # was refused admission, and there is nothing inflight or
-                # decoding whose completion could change that — another
-                # iteration would see the identical state, so the loop must
-                # terminate (the requests stay unfinished and surface in
-                # ServeReport.unfinished) instead of spinning forever.
-                if not session.live and not inflight and not any(
-                        t.active_slots() for t in self.tenants.values()):
+                # stall guard: every queue is exhausted, every waiting
+                # request was refused admission, and there is nothing
+                # inflight or decoding anywhere whose completion could
+                # change that — another iteration would see the identical
+                # state, so the loop must terminate (the requests stay
+                # unfinished and surface in ServeReport.unfinished)
+                if not any(s.live for s in sessions) and not inflight \
+                        and not any(t.active_slots()
+                                    for t in self.tenants.values()):
                     break
         if trace is not None:
             # close the request lifecycle, then balance it: SLO-demoted
-            # requests from the scheduler's eviction dedup, plus admitted
+            # requests from every device's scheduler, plus admitted
             # requests that never finished (refused-admission requests
             # were never admitted, so they stay out of the trace entirely)
-            trace.evicted = set(session.sched.demoted_requests())
+            trace.evicted = set()
+            for s in sessions:
+                trace.evicted |= set(s.sched.demoted_requests())
             by_id = {r.req_id: r for r in pending}
             admitted = {rid for rid, _ in trace.req_admits}
             trace.unfinished = {rid for rid in admitted
                                 if math.isnan(by_id[rid].finish_t)}
             cert.checks += 1
             cert.violations.extend(check_conservation(trace))
-            session.stats.hazard_checks += cert.checks
-            session.stats.hazard_violations += len(cert.violations)
+            sessions[0].stats.hazard_checks += cert.checks
+            sessions[0].stats.hazard_violations += len(cert.violations)
         self.last_trace = trace
-        self.jit_stats.merge(session.stats)
-        return now
+        # per-device dispatch time lives in each session's stats; analytic
+        # charges (prefill/attention/batched steps) were accumulated above
+        self._last_device_time = list(now)
+        self._last_device_busy = [
+            busy[d] + sessions[d].stats.modeled_time_s
+            for d in range(n_dev)]
+        for s in sessions:
+            self.jit_stats.merge(s.stats)
+        return max(now)
 
     # ------------------------------------------------------------------
     # round loop (baseline modes: rounds ARE their semantics)
@@ -801,8 +949,11 @@ class ServingEngine:
         wall0 = _time.perf_counter()
         if self.mode == "vliw":
             makespan = self._run_event_loop(pending, rng)
+            dev_t, dev_b = self._last_device_time, self._last_device_busy
         else:
             makespan = self._run_rounds(pending, rng)
+            dev_t = dev_b = None
         wall = _time.perf_counter() - wall0
         return ServeReport(self.mode, list(trace), makespan, wall,
-                           jit=self.jit_stats if self.mode == "vliw" else None)
+                           jit=self.jit_stats if self.mode == "vliw" else None,
+                           device_time_s=dev_t, device_busy_s=dev_b)

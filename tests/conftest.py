@@ -8,3 +8,14 @@ import pytest
 @pytest.fixture(scope="session")
 def rng():
     return jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="module", autouse=True)
+def _release_jax_caches():
+    # The whole suite shares one process, so every jitted executable from
+    # every module stays live until exit; past ~300 tests the accumulated
+    # XLA state can crash the CPU compiler outright. Dropping jax's caches
+    # at module teardown keeps the high-water mark at one module's worth.
+    # (Our own PlanCache instances are per-test and unaffected.)
+    yield
+    jax.clear_caches()

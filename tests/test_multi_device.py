@@ -1,0 +1,285 @@
+"""Multi-device mesh serving: placement, per-device isolation, token
+bit-identity across mesh sizes, device-keyed caches, and the certifier's
+placement-hazard taxonomy.
+
+The mesh is MODELED — N virtual device timelines over one host — so token
+streams must be bit-identical at every mesh size: placement changes time
+attribution, never a tenant's execution math or step order.
+"""
+import copy
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.analysis.certify import certify_trace, check_conservation
+from repro.configs import smoke_config
+from repro.core import GemmShape, make_op
+from repro.core.coalescer import Coalescer
+from repro.core.costmodel import CostModel, TPUV5E, V100
+from repro.core.dispatch import SuperkernelExecutor
+from repro.core.plancache import PlanCache
+from repro.core.schedtrace import PlacementHazard
+from repro.distributed import DeviceSet, PlacementPolicy
+from repro.models import Model
+from repro.serving import ServingEngine, Tenant, make_trace
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# fleet fixture: 8 tenants, mixed dense / MoE / SSM, 3 shared models
+# ---------------------------------------------------------------------------
+
+ARCHES = ["gemma3-1b", "grok-1-314b", "mamba2-2.7b"]
+# 8-tenant fleet: 4 dense, 2 expert-parallel MoE (grok smoke has
+# num_experts=4 — divides mesh sizes 2 and 4), 2 SSM
+FLEET = ["gemma3-1b", "gemma3-1b", "gemma3-1b", "gemma3-1b",
+         "grok-1-314b", "grok-1-314b", "mamba2-2.7b", "mamba2-2.7b"]
+
+
+@pytest.fixture(scope="module")
+def models():
+    out = {}
+    for i, arch in enumerate(ARCHES):
+        cfg = smoke_config(arch)
+        m = Model(cfg, param_dtype=jnp.float32)
+        out[arch] = (m, m.init(jax.random.PRNGKey(i + 1)))
+    return out
+
+
+@pytest.fixture(scope="module")
+def fleet_factory(models):
+    def factory(names=None):
+        names = names if names is not None else [f"t{i}" for i in
+                                                 range(len(FLEET))]
+        return [Tenant(name, *models[arch], cache_len=32, max_batch=2)
+                for name, arch in zip(names, FLEET)]
+    return factory
+
+
+def _fleet_trace():
+    names = [f"t{i}" for i in range(len(FLEET))]
+    return make_trace(names, rate_hz=1e4, n_per_tenant=2, prompt_len=6,
+                      max_new_tokens=3, slo_s=1.0)
+
+
+def _tokens(report):
+    return {r.req_id: tuple(r.tokens_out or ())
+            for r in report.requests}
+
+
+# ---------------------------------------------------------------------------
+# satellite 3: token bit-identity across mesh sizes + vs isolated runs
+# ---------------------------------------------------------------------------
+
+def test_fleet_tokens_bit_identical_across_mesh_sizes(fleet_factory):
+    """The same mixed fleet serves token-bit-identically on 1, 2 and 4
+    modeled devices, and matches each tenant running ISOLATED in its own
+    single-device engine — placement must never leak into the math."""
+    outs = {}
+    for n in (1, 2, 4):
+        eng = ServingEngine(fleet_factory(), mode="vliw", num_devices=n,
+                            certify=True)
+        rep = eng.run(copy.deepcopy(_fleet_trace()))
+        assert rep.unfinished == 0
+        outs[n] = _tokens(rep)
+        assert all(len(t) == 3 for t in outs[n].values())
+    assert outs[1] == outs[2] == outs[4]
+
+    # isolated oracle: each tenant alone, its own engine and sub-trace
+    isolated = {}
+    trace = _fleet_trace()
+    for tenant in fleet_factory():
+        sub = [copy.deepcopy(r) for r in trace if r.tenant == tenant.name]
+        for r in sub:   # re-base arrivals; identity (req_id) is unchanged
+            r.arrival_t -= sub[0].arrival_t
+        eng = ServingEngine([tenant], mode="vliw")
+        isolated.update(_tokens(eng.run(sub)))
+    assert isolated == outs[1]
+
+
+def test_mesh_run_reports_per_device_accounting(fleet_factory):
+    eng = ServingEngine(fleet_factory(), mode="vliw", num_devices=4,
+                        certify=True)
+    rep = eng.run(copy.deepcopy(_fleet_trace()))
+    assert rep.num_devices == 4
+    assert len(rep.device_time_s) == len(rep.device_busy_s) == 4
+    # every device got work (8 tenants, greedy fill) and the makespan is
+    # the max device clock
+    assert all(b > 0 for b in rep.device_busy_s)
+    assert rep.modeled_time_s == pytest.approx(max(rep.device_time_s))
+    assert rep.device_skew >= 1.0
+    assert len(rep.device_util) == 4
+    # MoE expert parallelism: grok spans the mesh (4 % 4 == 0), so the
+    # cross-device all-to-all charge must be visible, not free
+    assert rep.jit.collective_time_s > 0.0
+
+
+def test_mesh_not_slower_and_no_cross_device_groups(fleet_factory):
+    # saturating trace (near-simultaneous arrivals): an arrival-dominated
+    # trace idles every mesh size equally, so the parallelism win only
+    # shows when the fleet actually queues
+    names = [f"t{i}" for i in range(len(FLEET))]
+    sat = make_trace(names, rate_hz=1e9, n_per_tenant=2, prompt_len=6,
+                     max_new_tokens=8, slo_s=1.0)
+    reps = {}
+    for n in (1, 4):
+        eng = ServingEngine(fleet_factory(), mode="vliw", num_devices=n,
+                            certify=True)
+        reps[n] = (eng.run(copy.deepcopy(sat)), eng.last_trace)
+    rep4, trace4 = reps[4]
+    rep1, _ = reps[1]
+    assert rep4.modeled_time_s < rep1.modeled_time_s
+    # a coalesced group never mixes devices (structural: coalesce_key
+    # leads with op.device; re-checked here off the recorded trace)
+    for d in trace4.dispatches:
+        assert len({op.device for op in d.ops}) == 1
+        assert all(op.device == d.device for op in d.ops)
+    # coalescing still happens WITHIN devices
+    assert rep4.jit.coalesced_groups > 0
+
+
+# ---------------------------------------------------------------------------
+# satellite 3: placement determinism + load-skew bound
+# ---------------------------------------------------------------------------
+
+def test_placement_deterministic_and_skew_bounded(fleet_factory):
+    assignments = []
+    for _ in range(2):
+        eng = ServingEngine(fleet_factory(), mode="vliw", num_devices=4)
+        eng.run(copy.deepcopy(_fleet_trace()))
+        assignments.append({n: (p.device, p.expert_span)
+                            for n, p in eng.placement.assignments.items()})
+        # greedy LPT-style guarantee: no device exceeds the ideal share
+        # plus one tenant
+        pol = eng.placement
+        assert max(pol.load) <= pol.load_bound() + 1e-12
+        assert pol.skew() >= 1.0
+        # 8 tenants over 4 devices: greedy least-loaded fills every device
+        assert {p.device for p in pol.assignments.values()} == {0, 1, 2, 3}
+    assert assignments[0] == assignments[1]
+    # the grok tenants span the mesh (4 | 4), dense/ssm stay local
+    spans = {n: s for n, (_, s) in assignments[0].items()}
+    assert spans["t4"] == spans["t5"] == 4
+    assert all(spans[f"t{i}"] == 1 for i in (0, 1, 2, 3, 6, 7))
+
+
+def test_expert_span_requires_divisibility():
+    cfg = smoke_config("grok-1-314b")       # 4 experts
+    pol3 = PlacementPolicy(DeviceSet.homogeneous(V100, 3))
+    assert pol3.expert_span(cfg) == 1       # 4 % 3 != 0 -> local fallback
+    pol2 = PlacementPolicy(DeviceSet.homogeneous(V100, 2))
+    assert pol2.expert_span(cfg) == 2
+    dense = smoke_config("gemma3-1b")
+    assert pol2.expert_span(dense) == 1
+
+
+# ---------------------------------------------------------------------------
+# satellite 1: per-device conservation + placement-hazard mutation tests
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def mesh_trace(fleet_factory):
+    eng = ServingEngine(fleet_factory(), mode="vliw", num_devices=2,
+                        certify=True)
+    rep = eng.run(copy.deepcopy(_fleet_trace()))
+    assert rep.jit.hazard_checks > 0 and rep.jit.hazard_violations == 0
+    return eng.last_trace
+
+
+def test_mesh_trace_certifies_clean(mesh_trace):
+    trace = mesh_trace
+    cert = certify_trace(trace, raise_on_violation=False)
+    assert cert.checks > 0 and not cert.violations
+    # per-device conservation: every request retires on the device that
+    # admitted it
+    assert trace.req_devices
+    for rid, dev in trace.retire_devices.items():
+        assert trace.req_devices[rid] == dev
+    # both devices actually dispatched
+    assert {d.device for d in trace.dispatches} == {0, 1}
+
+
+def test_certifier_rejects_device_mixed_group(mesh_trace):
+    trace = copy.deepcopy(mesh_trace)
+    victim = next(d for d in trace.dispatches if d.ops)
+    victim.ops[0].device = victim.device + 1      # op off its group
+    cert = certify_trace(trace, raise_on_violation=False)
+    assert any(isinstance(v, PlacementHazard) for v in cert.violations)
+
+
+def test_certifier_rejects_offsite_dispatch(mesh_trace):
+    trace = copy.deepcopy(mesh_trace)
+    victim = next(d for d in trace.dispatches if d.ops)
+    victim.device += 1        # whole group launched off its assignment
+    cert = certify_trace(trace, raise_on_violation=False)
+    assert any(isinstance(v, PlacementHazard) for v in cert.violations)
+
+
+def test_conservation_rejects_cross_device_retire(mesh_trace):
+    trace = copy.deepcopy(mesh_trace)
+    rid = next(iter(trace.retire_devices))
+    trace.retire_devices[rid] = trace.req_devices[rid] + 1
+    violations = check_conservation(trace, raise_on_violation=False)
+    assert any(isinstance(v, PlacementHazard) for v in violations)
+
+
+# ---------------------------------------------------------------------------
+# satellite 2 regressions: device id in block-plan memo + weight-cache keys
+# ---------------------------------------------------------------------------
+
+def test_block_plan_memo_is_device_keyed():
+    """Two per-device coalescers SHARE one block-plan memo (the VLIWJit owns
+    a single PlanCache); before the fix the memo key carried only the shape
+    signature, so a heterogeneous mesh served device 0's modeled latency to
+    device 1."""
+    memo = PlanCache(64)
+    c_fast = Coalescer(CostModel(TPUV5E), memo=memo, device_id=0)
+    c_slow = Coalescer(CostModel(V100), memo=memo, device_id=1)
+
+    def ops_on(device):
+        ops = []
+        for i in range(2):
+            op = make_op(i, "gemv", GemmShape(m=4, n=256, k=128))
+            op.device = device
+            ops.append(op)
+        return ops
+
+    t0 = c_fast.plan(ops_on(0)).est_time_s
+    t1 = c_slow.plan(ops_on(1)).est_time_s
+    assert t0 != t1        # pre-fix: memo hit returned device 0's plan
+    # memo still serves within a device
+    assert c_fast.plan(ops_on(0)).est_time_s == t0
+
+
+def test_weight_cache_is_device_keyed():
+    """The packed-weight cache is shared across devices through one
+    executor; each device stages its own resident copy. Before the fix the
+    second device HIT device 0's entry (one modeled HBM residency serving
+    two devices for free)."""
+    ex = SuperkernelExecutor(PlanCache(32), bm=8)
+    # one set of operand ARRAYS for every call: the cache guards on weight
+    # identity (hot-swap invalidation), so fresh arrays would read as a
+    # weight swap rather than a device-key miss
+    probs = [(jax.random.normal(jax.random.PRNGKey(2 * i), (4, 128),
+                                jnp.float32),
+              jax.random.normal(jax.random.PRNGKey(2 * i + 1), (128, 256),
+                                jnp.float32)) for i in range(2)]
+
+    def fresh_ops():
+        ops = []
+        for i, (a, w) in enumerate(probs):
+            op = make_op(i, "gemv", GemmShape(m=4, n=256, k=128))
+            op.payload = (a, w, ("w", i))
+            ops.append(op)
+        return ops
+
+    out0 = ex.execute(fresh_ops(), device=0)
+    misses0 = ex.stats.weight_misses
+    ex.execute(fresh_ops(), device=0)              # same device: cache hit
+    assert ex.stats.weight_misses == misses0
+    assert ex.stats.weight_hits > 0
+    out1 = ex.execute(fresh_ops(), device=1)       # new device: must stage
+    assert ex.stats.weight_misses > misses0
+    for a, b in zip(out0, out1):                   # same math either way
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
