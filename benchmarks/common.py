@@ -37,6 +37,48 @@ def write_summary(name: str, data: Dict[str, Any]) -> str:
     return path
 
 
+def tuning_summary(jit) -> Dict[str, Any]:
+    """Block-tuning facts for a finished ``VLIWJit``, for JSON summaries.
+
+    Reports the tune-cache counters (hit rate is a gated acceptance
+    criterion in compiled_autotune_bench.py), every LIVE-tuned
+    (bm, bn, bk) per (device, objective, group signature), and the block
+    each memoized superkernel plan actually dispatched with — so summaries
+    carry per-group tile choices even on benches that run with live
+    tuning off. Reads go through ``PlanCache.peek`` (stats-neutral)."""
+    st = jit.tune_cache.stats
+    tuned: Dict[str, List[int]] = {}
+    for key in jit.tune_cache.keys():
+        res = jit.tune_cache.peek(key)
+        if res is None:
+            continue
+        _, dev, objective, sig, shared = key
+        dims = ",".join(f"{m}x{n}x{k}" for m, n, k, *_ in sig[:4])
+        label = (f"dev{dev}/{objective}/g{len(sig)}[{dims}"
+                 f"{',...' if len(sig) > 4 else ''}]"
+                 f"{'/shared' if shared else ''}")
+        tuned[label] = [res.block.bm, res.block.bn, res.block.bk]
+    plan_blocks: Dict[str, List[int]] = {}
+    for key in jit.block_plans.keys():
+        val = jit.block_plans.peek(key)
+        if val is None:
+            continue
+        b = val[0]                   # memo value is (block, waste, time)
+        plan_blocks.setdefault(f"g{len(key[2])}", []).append(
+            [b.bm, b.bn, b.bk])
+    return {
+        "live_tune": jit.live_tune,
+        "tune_cache": {"hits": st.hits, "misses": st.misses,
+                       "hit_rate": round(st.hit_rate, 4),
+                       "invalidations": st.invalidations,
+                       "evictions": st.evictions,
+                       "entries": len(jit.tune_cache)},
+        "tuned_blocks": tuned,
+        "plan_blocks": {k: sorted(set(map(tuple, v)))
+                        for k, v in plan_blocks.items()},
+    }
+
+
 def time_jax(fn: Callable, *args, iters: int = 5, warmup: int = 2) -> float:
     """Wall-clock microseconds per call of a jitted function (CPU)."""
     for _ in range(warmup):

@@ -32,9 +32,10 @@ import jax
 import jax.numpy as jnp
 
 try:                                     # via the run.py harness
-    from benchmarks.common import emit, header, write_summary
+    from benchmarks.common import (emit, header, tuning_summary,
+                                   write_summary)
 except ImportError:                      # standalone: python benchmarks/...
-    from common import emit, header, write_summary
+    from common import emit, header, tuning_summary, write_summary
 
 from repro.configs import smoke_config
 from repro.core import GemmShape, make_op
@@ -157,13 +158,13 @@ def bench_serving_identity(max_new_tokens: int):
          f";hazard_checks={jit.hazard_checks}"
          f";hazard_violations={jit.hazard_violations}")
     return (_tokens(reps["eager"]) == _tokens(reps["cached"]),
-            jit.hazard_checks, jit.hazard_violations)
+            jit.hazard_checks, jit.hazard_violations, eng.jit)
 
 
 def check(results, serving, steps: int, *,
           min_speedup: float) -> bool:
     ok = True
-    tokens_ok, hazard_checks, hazard_violations = serving
+    tokens_ok, hazard_checks, hazard_violations, jit_obj = serving
     speedup, d, retraces = results["stable"]
     if speedup < min_speedup:
         print(f"FAIL: cached dispatch not >= {min_speedup:.1f}x faster than "
@@ -198,6 +199,7 @@ def check(results, serving, steps: int, *,
         "post_warmup_retraces": retraces, "tokens_identical": tokens_ok,
         "hazard_checks": hazard_checks,
         "hazard_violations": hazard_violations,
+        "tuning": tuning_summary(jit_obj),
     })
     return ok
 

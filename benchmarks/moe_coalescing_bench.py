@@ -34,9 +34,10 @@ import jax
 import jax.numpy as jnp
 
 try:                                     # via the run.py harness
-    from benchmarks.common import emit, header, write_summary
+    from benchmarks.common import (emit, header, tuning_summary,
+                                   write_summary)
 except ImportError:                      # standalone: python benchmarks/...
-    from common import emit, header, write_summary
+    from common import emit, header, tuning_summary, write_summary
 
 from repro.configs import smoke_config
 from repro.models import Model
@@ -85,10 +86,12 @@ def bench(max_new_tokens: int, n_per_tenant: int):
         emit(f"moe_coalescing/{mode}/tenants=4",
              reps[mode].modeled_time_s * 1e6,
              f"tok_s={reps[mode].tokens_per_s:.0f}{extra}")
-    return reps
+        if mode == "vliw":
+            vliw_jit = eng.jit
+    return reps, vliw_jit
 
 
-def check(reps, *, expected_moe_steps: int) -> bool:
+def check(reps, jit_obj, *, expected_moe_steps: int) -> bool:
     ok = True
     jit = reps["vliw"].jit
     if _tokens(reps["vliw"]) != _tokens(reps["batched"]):
@@ -121,6 +124,7 @@ def check(reps, *, expected_moe_steps: int) -> bool:
         "modeled_time_us_batched": reps["batched"].modeled_time_s * 1e6,
         "tokens_identical":
             _tokens(reps["vliw"]) == _tokens(reps["batched"]),
+        "tuning": tuning_summary(jit_obj),
     })
     return ok
 
@@ -128,9 +132,9 @@ def check(reps, *, expected_moe_steps: int) -> bool:
 def run() -> None:
     """Entry point for the benchmarks/run.py harness."""
     max_new, n_per = 3, 1
-    reps = bench(max_new_tokens=max_new, n_per_tenant=n_per)
+    reps, jit_obj = bench(max_new_tokens=max_new, n_per_tenant=n_per)
     # 2 MoE tenants x (max_new - 1) decode steps each
-    assert check(reps, expected_moe_steps=2 * (max_new - 1)), \
+    assert check(reps, jit_obj, expected_moe_steps=2 * (max_new - 1)), \
         "moe coalescing acceptance failed"
 
 
@@ -142,8 +146,9 @@ def main() -> int:
     max_new = 3 if args.quick else 4
     n_per = 1 if args.quick else 2
     header()
-    reps = bench(max_new_tokens=max_new, n_per_tenant=n_per)
-    return 0 if check(reps, expected_moe_steps=2 * (max_new - 1)) else 1
+    reps, jit_obj = bench(max_new_tokens=max_new, n_per_tenant=n_per)
+    return 0 if check(reps, jit_obj,
+                      expected_moe_steps=2 * (max_new - 1)) else 1
 
 
 if __name__ == "__main__":

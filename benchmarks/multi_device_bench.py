@@ -34,9 +34,10 @@ import jax
 import jax.numpy as jnp
 
 try:                                     # via the run.py harness
-    from benchmarks.common import emit, header, write_summary
+    from benchmarks.common import (emit, header, tuning_summary,
+                                   write_summary)
 except ImportError:                      # standalone: python benchmarks/...
-    from common import emit, header, write_summary
+    from common import emit, header, tuning_summary, write_summary
 
 from repro.configs import smoke_config
 from repro.models import Model
@@ -88,10 +89,12 @@ def bench(max_new_tokens: int, n_per_tenant: int):
              f";collective_us={j.collective_time_s * 1e6:.2f}"
              f";hazard_checks={j.hazard_checks}"
              f";hazard_violations={j.hazard_violations}")
-    return runs
+        if n_dev == 4:
+            jit4 = eng.jit
+    return runs, jit4
 
 
-def check(runs) -> bool:
+def check(runs, jit4) -> bool:
     ok = True
     toks = {n: _tokens(rep) for n, (rep, _) in runs.items()}
     if not (toks[1] == toks[2] == toks[4]):
@@ -146,14 +149,15 @@ def check(runs) -> bool:
         "device_util_4dev": rep4.device_util,
         "hazard_checks": rep4.jit.hazard_checks,
         "hazard_violations": rep4.jit.hazard_violations,
+        "tuning": tuning_summary(jit4),
     })
     return ok
 
 
 def run() -> None:
     """Entry point for the benchmarks/run.py harness."""
-    runs = bench(max_new_tokens=3, n_per_tenant=1)
-    assert check(runs), "multi-device mesh acceptance failed"
+    runs, jit4 = bench(max_new_tokens=3, n_per_tenant=1)
+    assert check(runs, jit4), "multi-device mesh acceptance failed"
 
 
 def main() -> int:
@@ -164,8 +168,8 @@ def main() -> int:
     max_new = 3 if args.quick else 4
     n_per = 1 if args.quick else 2
     header()
-    runs = bench(max_new_tokens=max_new, n_per_tenant=n_per)
-    return 0 if check(runs) else 1
+    runs, jit4 = bench(max_new_tokens=max_new, n_per_tenant=n_per)
+    return 0 if check(runs, jit4) else 1
 
 
 if __name__ == "__main__":

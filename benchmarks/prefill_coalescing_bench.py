@@ -26,9 +26,10 @@ import jax
 import jax.numpy as jnp
 
 try:                                     # via the run.py harness
-    from benchmarks.common import emit, header, write_summary
+    from benchmarks.common import (emit, header, tuning_summary,
+                                   write_summary)
 except ImportError:                      # standalone: python benchmarks/...
-    from common import emit, header, write_summary
+    from common import emit, header, tuning_summary, write_summary
 
 from repro.configs import smoke_config
 from repro.models import Model
@@ -65,6 +66,8 @@ def bench(prompt_len: int, max_new_tokens: int, n_per_tenant: int):
     for name, kw in runs:
         eng = ServingEngine(tenants(), **kw)
         reps[name] = eng.run(copy.deepcopy(trace))
+        if name == "vliw":
+            vliw_jit = eng.jit
         extra = ""
         if reps[name].jit:
             j = reps[name].jit
@@ -83,10 +86,10 @@ def bench(prompt_len: int, max_new_tokens: int, n_per_tenant: int):
     emit(f"prefill_coalescing/speedup/prompt={prompt_len}", 0.0,
          f"vs_batched={speedup_batched:.2f}x"
          f";vs_serialized_prefill={speedup_serial:.2f}x")
-    return reps, speedup_batched, speedup_serial
+    return reps, speedup_batched, speedup_serial, vliw_jit
 
 
-def check(reps, speedup_batched, speedup_serial) -> bool:
+def check(reps, speedup_batched, speedup_serial, jit_obj) -> bool:
     ok = True
     if _tokens(reps["vliw"]) != _tokens(reps["batched"]):
         print("FAIL: vliw greedy tokens diverged from batched mode",
@@ -111,14 +114,17 @@ def check(reps, speedup_batched, speedup_serial) -> bool:
         "speedup_vs_batched": speedup_batched,
         "speedup_vs_serialized_prefill": speedup_serial,
         "tokens_identical": _tokens(reps["vliw"]) == _tokens(reps["batched"]),
+        "tuning": tuning_summary(jit_obj),
     })
     return ok
 
 
 def run() -> None:
     """Entry point for the benchmarks/run.py harness."""
-    reps, sb, ss = bench(prompt_len=256, max_new_tokens=3, n_per_tenant=1)
-    assert check(reps, sb, ss), "prefill coalescing acceptance failed"
+    reps, sb, ss, jit_obj = bench(prompt_len=256, max_new_tokens=3,
+                                  n_per_tenant=1)
+    assert check(reps, sb, ss, jit_obj), \
+        "prefill coalescing acceptance failed"
 
 
 def main() -> int:
@@ -132,9 +138,9 @@ def main() -> int:
     n_per_tenant = 1 if args.quick else 2
 
     header()
-    reps, sb, ss = bench(prompt_len=prompt_len, max_new_tokens=3,
-                         n_per_tenant=n_per_tenant)
-    return 0 if check(reps, sb, ss) else 1
+    reps, sb, ss, jit_obj = bench(prompt_len=prompt_len, max_new_tokens=3,
+                                  n_per_tenant=n_per_tenant)
+    return 0 if check(reps, sb, ss, jit_obj) else 1
 
 
 if __name__ == "__main__":

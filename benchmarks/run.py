@@ -11,7 +11,8 @@ import sys
 import traceback
 
 from benchmarks.common import header
-from benchmarks import (dispatch_bench, e2e_slo_attainment,
+from benchmarks import (compiled_autotune_bench, dispatch_bench,
+                        e2e_slo_attainment,
                         fig3_batch_utilization,
                         fig4_time_multiplexing, fig5_spatial_variance,
                         fig6_coalescing, fig7_clustering,
@@ -37,6 +38,7 @@ MODULES = [
     ("moe_coalescing", moe_coalescing_bench),
     ("stacked_depth", stacked_depth_bench),
     ("multi_device", multi_device_bench),
+    ("compiled_autotune", compiled_autotune_bench),
 ]
 
 

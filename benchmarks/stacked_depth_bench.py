@@ -25,9 +25,10 @@ import jax.numpy as jnp
 import numpy as np
 
 try:                                     # via the run.py harness
-    from benchmarks.common import emit, header, write_summary
+    from benchmarks.common import (emit, header, tuning_summary,
+                                   write_summary)
 except ImportError:                      # standalone: python benchmarks/...
-    from common import emit, header, write_summary
+    from common import emit, header, tuning_summary, write_summary
 
 from repro.configs import smoke_config
 from repro.core.jit import VLIWJit, build_dense_decode_template
@@ -88,7 +89,9 @@ def check_token_identity() -> bool:
             cache = prog.env["cache"]
             seq.append(np.asarray(tok).ravel().tolist())
         toks[stacked] = seq
-    return toks[True] == toks[False]
+        if stacked:
+            stacked_jit = vj
+    return toks[True] == toks[False], stacked_jit
 
 
 def run() -> None:
@@ -132,7 +135,7 @@ def main() -> int:
               "with depth (trace size must be depth-independent)",
               file=sys.stderr)
         ok = False
-    tokens_ok = check_token_identity()
+    tokens_ok, stacked_jit = check_token_identity()
     if not tokens_ok:
         print("FAIL: stacked vs per-layer greedy tokens DIVERGED",
               file=sys.stderr)
@@ -149,6 +152,7 @@ def main() -> int:
         "stacked_build_growth": stacked_growth,
         "per_layer_build_growth": per_layer_growth,
         "token_identity": tokens_ok,
+        "tuning": tuning_summary(stacked_jit),
     })
     return 0 if ok else 1
 

@@ -1,14 +1,30 @@
 """Paper Table 1: greedy vs collaborative autotuned kernels. Greedy
 maximizes isolated throughput; collaborative accepts an isolated regression
 for higher aggregate throughput when dispatched concurrently (paper: 1.25×,
-20% isolated regression)."""
+20% isolated regression).
+
+``--live`` additionally cross-checks the LIVE tuner (the one the JIT
+consults on the dispatch hot path, core/autotuner.LiveTuner) against the
+offline autotuner: on a STABLE uniform group both faces minimize the same
+collaborative objective over the same candidate set, so their tuned
+(bm, bn, bk) must agree exactly — and the second live lookup must be a
+pure tune-cache hit. The run.py harness runs both parts.
+"""
 from __future__ import annotations
 
-from benchmarks.common import emit
-from repro.core import Autotuner, CostModel, GemmShape, V100
+import argparse
+import sys
+
+try:                                     # via the run.py harness
+    from benchmarks.common import emit, header
+except ImportError:                      # standalone: python benchmarks/...
+    from common import emit, header
+
+from repro.core import (Autotuner, CostModel, GemmShape, LiveTuner,
+                        PlanCache, V100)
 
 
-def run() -> None:
+def run_offline() -> None:
     cm = CostModel(V100)
     at = Autotuner(cm)
     shape = GemmShape(m=784, n=512, k=1152, dtype_bytes=4)
@@ -23,3 +39,53 @@ def run() -> None:
              f"greedy_mux={g_mux:.2f}TF;collab_mux={c_mux:.2f}TF;"
              f"speedup={r.multiplexed_speedup:.2f}x(paper1.25x);"
              f"iso_regression={r.isolated_regression:.2f}")
+
+
+def run_live() -> bool:
+    """Offline-tuned vs live-tuned configs must agree on stable groups."""
+    cm = CostModel(V100)
+    at = Autotuner(cm)
+    lt = LiveTuner(cm, PlanCache(32))       # collaborative objective
+    ok = True
+    cases = [(GemmShape(784, 512, 1152, dtype_bytes=4), 4),
+             (GemmShape(16, 2048, 2048, dtype_bytes=4), 8),
+             (GemmShape(1, 4096, 2048, dtype_bytes=4), 6)]
+    for shape, G in cases:
+        offline = at.tune_for_coalescing(shape, G)
+        group = [shape] * G
+        live = lt.tune(group)
+        agree = offline == live
+        hit = lt.tune(group) == live and lt.cache.stats.hits >= 1
+        emit(f"table1/live/G{G}", 0.0,
+             f"m={shape.m};n={shape.n};k={shape.k}"
+             f";offline={offline.bm}x{offline.bn}x{offline.bk}"
+             f";live={live.bm}x{live.bn}x{live.bk}"
+             f";agree={agree};steady_hit={hit}")
+        if not (agree and hit):
+            print(f"FAIL: live tuner diverged from offline on stable "
+                  f"group {shape} x{G}: offline={offline} live={live} "
+                  f"steady_hit={hit}", file=sys.stderr)
+            ok = False
+    return ok
+
+
+def run() -> None:
+    """Entry point for the benchmarks/run.py harness (both parts)."""
+    run_offline()
+    assert run_live(), "live vs offline autotuner agreement failed"
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--live", action="store_true",
+                    help="run only the live-vs-offline agreement check")
+    args = ap.parse_args()
+    header()
+    if args.live:
+        return 0 if run_live() else 1
+    run_offline()
+    return 0 if run_live() else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -6,7 +6,8 @@ slack staggering (§5.2); autotuner — greedy vs collaborative AOT tuning
 (Table 1); costmodel — calibrated V100 + TPU-v5e roofline device models;
 simulator — event-driven multiplexing comparison (Figs 4–6).
 """
-from repro.core.autotuner import Autotuner, TuneResult
+from repro.core.autotuner import (Autotuner, LiveTuner, LiveTuneResult,
+                                  TuneResult, group_signature)
 from repro.core.clustering import Cluster, cluster_greedy, group_ops_exact
 from repro.core.coalescer import Coalescer, SuperkernelPlan
 from repro.core.costmodel import (BlockConfig, CostModel, Device, GemmShape,
@@ -24,12 +25,13 @@ from repro.core.simulator import (POLICIES, Request, SimResult, make_requests,
 __all__ = [
     "Autotuner", "BlockConfig", "Cluster", "Coalescer", "CostModel",
     "Decision", "Device", "DispatchStats", "GEMV_MAX_ROWS", "GemmShape",
-    "KernelOp", "OoOScheduler",
+    "KernelOp", "LiveTuneResult", "LiveTuner", "OoOScheduler",
     "PlanCache", "PlanCacheStats", "POLICIES",
     "Request", "SchedulerConfig", "SimResult", "SuperkernelExecutor",
     "SuperkernelPlan", "TPUV5E",
     "TuneResult", "V100", "cluster_greedy", "gemm_population",
-    "group_ops_exact", "make_op", "make_requests", "op_aspect",
+    "group_ops_exact", "group_signature", "make_op", "make_requests",
+    "op_aspect",
     "simulate_space_mux",
     "simulate_time_mux", "simulate_vliw", "stream_program", "zoo_population",
 ]

@@ -12,6 +12,7 @@ import dataclasses
 import math
 from typing import Dict, List, Optional, Sequence, Tuple
 
+from repro.core.autotuner import LiveTuner
 from repro.core.clustering import Cluster, exact_key
 from repro.core.costmodel import BlockConfig, CostModel, DEFAULT_BLOCK, GemmShape
 from repro.core.kernelspec import KernelOp
@@ -41,11 +42,17 @@ class Coalescer:
     def __init__(self, cost: CostModel, max_group: int = 64,
                  max_waste: float = 0.25,
                  tuned_blocks: Optional[Dict[Tuple, BlockConfig]] = None,
-                 memo: Optional[PlanCache] = None, *, device_id: int = 0):
+                 memo: Optional[PlanCache] = None, *, device_id: int = 0,
+                 tuner: Optional[LiveTuner] = None):
         self.cost = cost
         self.max_group = max_group
         self.max_waste = max_waste
         self.tuned_blocks = tuned_blocks or {}
+        # live autotuner (core/autotuner.LiveTuner): when present it
+        # REPLACES both the AOT table and the static heuristic — every
+        # block_for consults it (a tune-cache lookup per call, an
+        # exhaustive cost-model search only on a never-seen signature)
+        self.tuner = tuner
         # optional block-plan memo (core/plancache.py): the JIT re-plans the
         # same coalesced group signatures on every dispatch of a steady-state
         # decode loop, so (block config, padding waste, modeled latency) are
@@ -60,16 +67,28 @@ class Coalescer:
         self.device_id = device_id
 
     # ------------------------------------------------------------------
-    def block_for(self, shapes: Sequence[GemmShape]) -> BlockConfig:
-        key = exact_key(shapes[0])
-        if key in self.tuned_blocks:
-            return self.tuned_blocks[key]
+    def block_for(self, shapes: Sequence[GemmShape], *,
+                  shared_operand: bool = False) -> BlockConfig:
+        if self.tuner is not None:
+            return self.tuner.tune(shapes, shared_operand=shared_operand)
+        # AOT table lookup keyed on the FULL group signature: the table is
+        # per-shape (exact_key), so it only applies when every member
+        # shares that one key — a tile tuned for shape s0 alone must not
+        # be imposed on a mixed group whose envelope is the max over
+        # members (pre-fix this keyed on shapes[0] only, silently
+        # mis-tiling every other member; see tests/test_live_tuner.py's
+        # regression).
+        keys = {exact_key(s) for s in shapes}
+        if len(keys) == 1:
+            key = next(iter(keys))
+            if key in self.tuned_blocks:
+                return self.tuned_blocks[key]
         # default: clamp tile to the (padded) problem size, MXU-aligned
         n = max(s.n for s in shapes)
         m = max(s.m for s in shapes)
         bm = min(128, max(8, 1 << (max(m - 1, 1)).bit_length()))
-        bn = min(128, max(128, n)) if n >= 128 else n
-        return BlockConfig(bm=bm, bn=max(bn, 8), bk=DEFAULT_BLOCK.bk)
+        return BlockConfig(bm=bm, bn=max(8, min(128, n)),
+                           bk=DEFAULT_BLOCK.bk)
 
     def vmem_ok(self, shapes: Sequence[GemmShape], block: BlockConfig) -> bool:
         k = max(s.k for s in shapes)
@@ -103,18 +122,29 @@ class Coalescer:
                     c = Cluster(slot_shapes)
                     useful += c.useful_flops
                     padded += c.padded_flops
-                    b = self.block_for(slot_shapes)
+                    b = self.block_for(slot_shapes, shared_operand=shared)
                     if block is None:
                         block = b
                     t += self.cost.coalesced_time(slot_shapes, b,
                                                   shared_operand=shared)
                 waste = 0.0 if padded == 0 else 1.0 - useful / padded
-                return block or self.block_for(shapes), waste, t
-            block = self.block_for(shapes)
+                return (block or self.block_for(shapes,
+                                                shared_operand=shared),
+                        waste, t)
+            block = self.block_for(shapes, shared_operand=shared)
             return (block, Cluster(list(shapes)).padding_waste,
                     self.cost.coalesced_time(shapes, block,
                                              shared_operand=shared))
 
+        # live tuning consults the tuner on EVERY plan (a tune-cache hit
+        # per dispatch in steady state — the gated hit-rate criterion),
+        # and the tuned block joins the memo key: a re-tune that changed
+        # the config can never be served a stale memoized (waste, time)
+        tuned = None
+        if self.tuner is not None:
+            rep = [sh for _, sh in next(zip(*stacks))] if stacked \
+                else shapes
+            tuned = self.block_for(rep, shared_operand=shared)
         if self.memo is not None:
             key = ("block", self.device_id,
                    tuple((s.m, s.n, s.k, s.dtype_bytes, s.layers)
@@ -122,7 +152,9 @@ class Coalescer:
                    tuple(tuple((t_, sh.m, sh.layers, sh.n, sh.k,
                                 sh.dtype_bytes) for t_, sh in st)
                          for st in stacks) if stacked else None,
-                   shared)
+                   shared,
+                   None if tuned is None else (tuned.bm, tuned.bn,
+                                               tuned.bk))
             block, waste, t = self.memo.get_or_build(key, derive)
         else:
             block, waste, t = derive()

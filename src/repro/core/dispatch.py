@@ -69,13 +69,15 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.clustering import matvec_weight_key
+from repro.core.costmodel import BlockConfig
 from repro.core.kernelspec import KernelOp
 from repro.core.schedtrace import OperandIdentityHazard
 from repro.core.plancache import PlanCache
 from repro.kernels.coalesced_gemm import coalesced_gemm
 from repro.kernels.coalesced_gemv import coalesced_gemv
-from repro.kernels.ops import (INTERPRET, _round_up, coalesced_matvec,
-                               envelope_bucket, execute_superkernel)
+from repro.kernels.ops import (_round_up, check_vmem, coalesced_matvec,
+                               envelope_bucket, execute_superkernel,
+                               interpret_default)
 
 
 # ---------------------------------------------------------------------------
@@ -233,7 +235,11 @@ class SuperkernelExecutor:
             else PlanCache(256, byte_capacity=1 << 30)
         self.bm, self.bn, self.bk = bm, bn, bk
         self.enabled = enabled
-        self.interpret = INTERPRET if interpret is None else interpret
+        # resolved at construction from the CURRENT process default (not
+        # the import-time value): a bench that probes the compiled lane
+        # and falls back via ops.set_interpret gets interpret executors
+        self.interpret = interpret_default() if interpret is None \
+            else interpret
         self.stats = DispatchStats()
 
     # ------------------------------------------------------------------
@@ -340,12 +346,21 @@ class SuperkernelExecutor:
     def execute(self, ops: Sequence[KernelOp], *,
                 shared_operand: bool = False,
                 interpret: Optional[bool] = None,
-                device: int = 0) -> List[jax.Array]:
+                device: int = 0,
+                block: Optional[BlockConfig] = None) -> List[jax.Array]:
         """Execute a planned group; returns per-problem outputs in op order.
 
         Each op carries its operand binding (``op.payload`` =
         (activation, weight, weight_key), attached by
-        ``JitSession._push_op``)."""
+        ``JitSession._push_op``). ``block`` overrides the executor's
+        default (bm, bn, bk) for THIS dispatch — the live-tuned config of
+        the planned group (``SuperkernelPlan.block`` when
+        ``VLIWJit(live_tune=True)``). The override enters the jitted
+        bodies as static args, so each DISTINCT tuned config compiles
+        once (a warmup trace, like any first-seen envelope bucket) and a
+        group whose signature — and therefore tuned config — is stable
+        never retraces; config churn that lands back on an already-seen
+        config is a pure compile-cache hit, never a spurious retrace."""
         # pack in CANONICAL op order: the scheduler sorts a group by
         # urgency, so the same set of ops can arrive in different orders
         # tick to tick — an order-sensitive key would fork duplicate
@@ -380,7 +395,7 @@ class SuperkernelExecutor:
         canon = self.execute_problems(problems, wkeys,
                                       shared_operand=shared_operand,
                                       interpret=interpret, group=group,
-                                      device=device)
+                                      device=device, block=block)
         outs: List[Optional[jax.Array]] = [None] * len(ops)
         for pos, i in enumerate(order):
             outs[i] = canon[pos]
@@ -389,10 +404,17 @@ class SuperkernelExecutor:
     def execute_problems(self, problems, wkeys, *,
                          shared_operand: bool = False,
                          interpret: Optional[bool] = None,
-                         group=None, device: int = 0) -> List[jax.Array]:
+                         group=None, device: int = 0,
+                         block: Optional[BlockConfig] = None
+                         ) -> List[jax.Array]:
         interpret = self.interpret if interpret is None else interpret
+        # per-dispatch tile override (live tuning); tuner candidates are
+        # power-of-two, which the m-tile bucketing below relies on
+        bm, bn, bk = (self.bm, self.bn, self.bk) if block is None else \
+            (block.bm, block.bn, block.bk)
+        assert bm & (bm - 1) == 0, f"bm must be a power of two, got {bm}"
         if not self.enabled:
-            return execute_superkernel(problems, bm=self.bm,
+            return execute_superkernel(problems, bm=bm, bn=bn, bk=bk,
                                        shared_operand=shared_operand,
                                        interpret=interpret)
         acts = tuple(a for a, _ in problems)
@@ -415,12 +437,14 @@ class SuperkernelExecutor:
             K = envelope_bucket(int(w.shape[0]))
             N = envelope_bucket(int(w.shape[1]))
             m_tiles = _tile_bucket([sum(int(a.shape[0]) for a in acts)],
-                                   self.bm)
+                                   bm)
             b = self._packed_weights([w], [wkeys[0]], K, N, 1, shared=True,
                                      group=group, device=device)
+            check_vmem(bm, min(bn, N), min(bk, K),
+                       dtype_bytes=b.dtype.itemsize, interpret=interpret)
             outs = _dispatch_shared(
                 acts, b, n_real=int(w.shape[1]), m_tiles=m_tiles,
-                bm=self.bm, bn=min(self.bn, N), bk=min(self.bk, K),
+                bm=bm, bn=min(bn, N), bk=min(bk, K),
                 interpret=interpret)
         else:
             K = envelope_bucket(max(int(w.shape[0]) for w in ws))
@@ -429,20 +453,22 @@ class SuperkernelExecutor:
                                      group=group, device=device)
             n_real = [int(w.shape[1]) for w in ws]
             n_real += [n_real[0]] * (G_pad - G)
-            m_tiles = _tile_bucket([int(a.shape[0]) for a in acts], self.bm)
+            m_tiles = _tile_bucket([int(a.shape[0]) for a in acts], bm)
             gids = []
             for g, a in enumerate(acts):
                 # pad problems read group 0's weights: their activations
                 # are zero, so the product is zero and never read back
                 gids.extend([g if g < G else 0]
-                            * (_round_up(int(a.shape[0]), self.bm)
-                               // self.bm))
+                            * (_round_up(int(a.shape[0]), bm)
+                               // bm))
             gids.extend([0] * (m_tiles - len(gids)))  # pad tiles: group 0
+            check_vmem(bm, min(bn, N), min(bk, K),
+                       dtype_bytes=b.dtype.itemsize, interpret=interpret)
             outs = _dispatch_grouped(
                 acts, b, jnp.asarray(gids, jnp.int32),
                 n_real=tuple(n_real),
-                m_tiles=m_tiles, bm=self.bm, bn=min(self.bn, N),
-                bk=min(self.bk, K), interpret=interpret)
+                m_tiles=m_tiles, bm=bm, bn=min(bn, N),
+                bk=min(bk, K), interpret=interpret)
         self.stats.retraces += trace_count() - trace0
         return list(outs[:G])
 

@@ -114,11 +114,12 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.core.autotuner import LiveTuner
 from repro.core.clustering import (is_expert_op, op_weight_identity,
                                    op_weight_key, shared_weight_key,
                                    weight_key)
 from repro.core.coalescer import Coalescer
-from repro.core.costmodel import CostModel, GemmShape, TPUV5E
+from repro.core.costmodel import BlockConfig, CostModel, GemmShape, TPUV5E
 from repro.core.dispatch import (DispatchStats, SuperkernelExecutor,
                                  _tile_bucket, envelope_bucket)
 from repro.core.kernelspec import make_op, op_aspect
@@ -913,8 +914,12 @@ def _stacked_dense_body_stage(model, params, B: int, lo: int, hi: int, *,
     if moe:
         aux["router"] = routers
 
-    def run(env, padded, ex):
-        key = (ex.bm, ex.bn, ex.bk, ex.interpret)
+    def run(env, padded, ex, block=None):
+        # live-tuned tile override (JitSession._run_stacked): keyed beside
+        # the executor defaults, so each distinct tuned config compiles
+        # its scan body once and stable configs never retrace
+        key = (ex.bm, ex.bn, ex.bk, ex.interpret) if block is None else \
+            (block.bm, block.bn, block.bk, ex.interpret)
         fn = jits.get(key)
         if fn is None:
             fn = jits[key] = jax.jit(make_scan(*key))
@@ -1219,8 +1224,12 @@ def _build_stacked_ssm_decode_template(model, params, batch: int
 
     aux = {"ln1": ln1s, "mamba": mamba_rest}
 
-    def run(env, padded, ex):
-        key = (ex.bm, ex.bn, ex.bk, ex.interpret)
+    def run(env, padded, ex, block=None):
+        # live-tuned tile override (JitSession._run_stacked): keyed beside
+        # the executor defaults, so each distinct tuned config compiles
+        # its scan body once and stable configs never retrace
+        key = (ex.bm, ex.bn, ex.bk, ex.interpret) if block is None else \
+            (block.bm, block.bn, block.bk, ex.interpret)
         fn = jits.get(key)
         if fn is None:
             fn = jits[key] = jax.jit(make_scan(*key))
@@ -1450,8 +1459,12 @@ def _stacked_prefill_body_stage(model, params, Sp: int, lo: int, hi: int
 
     aux = {"ln1": ln1s, "ln2": ln2s}
 
-    def run(env, padded, ex):
-        key = (ex.bm, ex.bn, ex.bk, ex.interpret)
+    def run(env, padded, ex, block=None):
+        # live-tuned tile override (JitSession._run_stacked): keyed beside
+        # the executor defaults, so each distinct tuned config compiles
+        # its scan body once and stable configs never retrace
+        key = (ex.bm, ex.bn, ex.bk, ex.interpret) if block is None else \
+            (block.bm, block.bn, block.bk, ex.interpret)
         fn = jits.get(key)
         if fn is None:
             fn = jits[key] = jax.jit(make_scan(*key))
@@ -1681,6 +1694,12 @@ class JitStats:
         default_factory=PlanCacheStats)
     block_plans: PlanCacheStats = dataclasses.field(
         default_factory=PlanCacheStats)
+    # live-tuner cache deltas (core/autotuner.LiveTuner / VLIWJit.
+    # tune_cache): one access per planned dispatch when live tuning is on
+    # (zeros otherwise), a miss only on a never-seen group signature — the
+    # compiled-autotune bench gates hit rate ≥ (steps-1)/steps on these.
+    tune_cache: PlanCacheStats = dataclasses.field(
+        default_factory=PlanCacheStats)
     # jitted dispatch fast-path deltas (core/dispatch.py): packed-weight
     # cache hits/misses/invalidations, retraces of the jitted
     # pack+kernel+unpack, and weight bytes NOT re-staged thanks to the
@@ -1757,9 +1776,18 @@ class JitSession:
         # default (device 0, jit.cost) is exactly the single-device setup.
         self.device = device
         self.cost = cost if cost is not None else jit.cost
-        coalescer = jit.coalescer if device == 0 and cost is None else \
-            Coalescer(self.cost, max_group=jit.max_group,
-                      memo=jit.block_plans, device_id=device)
+        if device == 0 and cost is None:
+            coalescer = jit.coalescer
+        else:
+            # non-default device: a per-device tuner over THIS device's
+            # cost model, sharing the JIT-owned tune cache (device id in
+            # every key) — mirrors the per-device coalescer/memo pattern
+            tuner = None if jit.tuner is None else \
+                LiveTuner(self.cost, jit.tune_cache,
+                          objective=jit.tune_objective, device_id=device)
+            coalescer = Coalescer(self.cost, max_group=jit.max_group,
+                                  memo=jit.block_plans, device_id=device,
+                                  tuner=tuner)
         self.sched = OoOScheduler(self.cost, coalescer, jit.sched_cfg,
                                   device=device)
         # expert-parallel span per stream (tenant): streams whose MoE
@@ -1785,11 +1813,13 @@ class JitSession:
         # report only its own delta
         self._plan_base = jit.plan_cache.stats.copy()
         self._block_base = jit.block_plans.stats.copy()
+        self._tune_base = jit.tune_cache.stats.copy()
         self._dispatch_base = jit.executor.stats.copy()
 
     def _sync_cache_stats(self) -> None:
         self.stats.plan_cache = self.jit.plan_cache.stats - self._plan_base
         self.stats.block_plans = self.jit.block_plans.stats - self._block_base
+        self.stats.tune_cache = self.jit.tune_cache.stats - self._tune_base
         self.stats.dispatch = self.jit.executor.stats - self._dispatch_base
 
     @property
@@ -1940,10 +1970,14 @@ class JitSession:
             env_writes=tuple(writes) if writes is not None else ("*",),
             env_id=id(prog.env), device=op.device)
 
-    def _run_stacked(self, ops, completed) -> None:
+    def _run_stacked(self, ops, completed,
+                     block: Optional[BlockConfig] = None) -> None:
         """Dispatch a coalesced group of layer-stacked body ops: pack each
         op's stacked weight operands through the executor's persistent
-        cache, then run the scanned bodies back-to-back."""
+        cache, then run the scanned bodies back-to-back. ``block``
+        overrides the executor's default tile for the scanned GEMMs (the
+        live-tuned config of the plan) — each distinct config compiles its
+        own scan body once, keyed beside the executor defaults."""
         ex = self.jit.executor
         for op in ops:
             prog, st = self.live.pop(op.op_id)
@@ -1982,7 +2016,7 @@ class JitSession:
                 else:
                     ex.stats.weight_hits += 1
                 ex.stats.dispatches += 1
-            st.run(prog.env, padded, ex)
+            st.run(prog.env, padded, ex, block)
             prog.pc += 1
             nxt = prog.advance_glue()
             if nxt is None:
@@ -2023,6 +2057,12 @@ class JitSession:
         # per-layer exchange, not per-member — so charge the max, exactly
         # as Coalescer.plan does for est_time_s
         coll = max((op.collective_s for op in plan.ops), default=0.0)
+        # live tuning: the plan's block IS the tuned config for this
+        # group's signature — flow it into the executor so the dispatched
+        # kernels actually run the tile the cost model chose. Off (the
+        # default), the executor keeps its fixed defaults and nothing about
+        # the pre-existing trace-cache population changes.
+        tuned_block = plan.block if self.jit.live_tune else None
         if stacked:
             # coalesce_key keeps stacked and plain ops in disjoint buckets
             assert all(op.stack is not None for op in plan.ops)
@@ -2035,7 +2075,8 @@ class JitSession:
             # pack/kernel/unpack
             outs = self.jit.executor.execute(plan.ops,
                                              shared_operand=shared,
-                                             device=self.device)
+                                             device=self.device,
+                                             block=tuned_block)
             serial_shapes = [o.shape for o in plan.ops]
             t = self.cost.coalesced_time(serial_shapes, plan.block,
                                          shared_operand=shared) + coll
@@ -2056,7 +2097,7 @@ class JitSession:
         stats.modeled_serial_time_s += self.cost.time_multiplexed(
             serial_shapes, plan.block) + coll
         if stacked:
-            self._run_stacked(plan.ops, completed)
+            self._run_stacked(plan.ops, completed, block=tuned_block)
         else:
             for op, out in zip(plan.ops, outs):
                 prog, st = self.live.pop(op.op_id)
@@ -2081,7 +2122,9 @@ class VLIWJit:
                  max_group: int = 16, bm: int = 8,
                  plan_capacity: int = 128,
                  weight_capacity: Optional[int] = None,
-                 weight_budget_bytes: Optional[int] = 1 << 30):
+                 weight_budget_bytes: Optional[int] = 1 << 30,
+                 live_tune: bool = False,
+                 tune_objective: str = "collaborative"):
         self.cost = cost or CostModel(TPUV5E)
         # persistent plan caches (core/plancache.py): program templates for
         # the serving hot path and superkernel block plans per coalesced
@@ -2091,8 +2134,22 @@ class VLIWJit:
         self.plan_cache = PlanCache(plan_capacity)
         self.block_plans = PlanCache(plan_capacity * 4)
         self.max_group = max_group
+        # live collaborative autotuning (core/autotuner.LiveTuner): when
+        # on, every coalescer consults the tuner per plan and the tuned
+        # (bm, bn, bk) flows into the dispatched superkernels. TuneResults
+        # live in their own device-keyed PlanCache BESIDE the block plans
+        # — same lifetime (the JIT's), separately accounted
+        # (JitStats.tune_cache) because the hit rate is a gated serving
+        # acceptance criterion. The cache exists even with live_tune=False
+        # so session stat plumbing is unconditional (its stats stay zero).
+        self.tune_cache = PlanCache(plan_capacity * 4)
+        self.live_tune = live_tune
+        self.tune_objective = tune_objective
+        self.tuner = LiveTuner(self.cost, self.tune_cache,
+                               objective=tune_objective) if live_tune \
+            else None
         self.coalescer = Coalescer(self.cost, max_group=max_group,
-                                   memo=self.block_plans)
+                                   memo=self.block_plans, tuner=self.tuner)
         self.sched_cfg = sched_cfg
         self.bm = bm
         # the jitted dispatch fast path (core/dispatch.py): packed weight

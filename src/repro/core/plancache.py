@@ -226,6 +226,14 @@ class PlanCache:
         return value, False
 
     # ------------------------------------------------------------------
+    def peek(self, key: Hashable) -> Any:
+        """Read an entry WITHOUT touching stats, LRU order or guards
+        (``None`` if absent). For introspection only — bench summaries and
+        lifecycle tests read tuned configs through this so observing a
+        cache never perturbs the hit-rate acceptance criteria it gates."""
+        entry = self._entries.get(key)
+        return entry.value if entry is not None else None
+
     def invalidate(self, key: Hashable) -> bool:
         """Explicitly drop one entry; returns whether it existed."""
         if self._pop(key) is not None:

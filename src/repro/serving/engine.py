@@ -269,7 +269,9 @@ class ServingEngine:
                  stacked_layers: bool = True,
                  certify: bool = False,
                  num_devices: int = 1,
-                 devices: Optional[DeviceSet] = None):
+                 devices: Optional[DeviceSet] = None,
+                 live_tune: bool = False,
+                 tune_objective: str = "collaborative"):
         assert mode in ("time", "batched", "vliw")
         self.tenants = {t.name: t for t in tenants}
         self.mode = mode
@@ -340,9 +342,17 @@ class ServingEngine:
         # weight_budget_bytes bounds the dispatch executor's packed-weight
         # cache in BYTES — entries are full padded operand copies, and the
         # stacked per-expert packs of MoE tenants are the big ones
+        # live_tune=True puts the collaborative autotuner on the dispatch
+        # hot path (core/autotuner.LiveTuner): every coalesced group's
+        # (bm, bn, bk) is tuned for the group's actual co-resident shapes
+        # and flows into the dispatched superkernels, cached per signature
+        # in the JIT's tune cache. tune_objective="greedy" is the Table 1
+        # ablation (isolated-latency tiles imposed on the shared device).
         self.jit = VLIWJit(self.cost, sched_cfg=sched_cfg,
                            max_group=max_group, plan_capacity=plan_capacity,
-                           weight_budget_bytes=weight_budget_bytes)
+                           weight_budget_bytes=weight_budget_bytes,
+                           live_tune=live_tune,
+                           tune_objective=tune_objective)
         self.jit_stats = JitStats()
         for t in tenants:
             t.cache = t.model.init_cache(t.max_batch, t.cache_len)

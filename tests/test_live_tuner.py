@@ -1,0 +1,225 @@
+"""Live collaborative autotuning on the JIT dispatch hot path (PR 9).
+
+Covers: the ``Coalescer.block_for`` full-group-signature regression (a tile
+tuned for one shape must not be imposed on a mixed group), ``LiveTuner``
+objectives + tune-cache lifecycle (stable-group hits, re-tune on tenant
+churn, device-keyed mesh isolation), and serving-level acceptance — live
+tuning changes no tokens and survives weight hot-swaps untouched (tuning is
+params-free).
+"""
+import copy
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import smoke_config
+from repro.core import (Autotuner, BlockConfig, Coalescer, CostModel,
+                        GemmShape, LiveTuner, TPUV5E, V100, group_signature)
+from repro.core.clustering import exact_key
+from repro.core.costmodel import DEFAULT_BLOCK
+from repro.core.plancache import PlanCache
+from repro.models import Model
+from repro.serving import ServingEngine, Tenant
+from repro.serving.workload import two_wave_trace
+
+CM = CostModel(V100)
+SA = GemmShape(m=784, n=512, k=1152, dtype_bytes=4)
+SB = GemmShape(m=32, n=128, k=1152, dtype_bytes=4)   # differs in exact_key
+# witness group where the two objectives pick DIFFERENT tiles (Table 1
+# direction at group granularity — see test_tune_group_objectives_diverge)
+WITNESS = [GemmShape(16, 2048, 2048)] * 8
+
+
+def _tokens(rep):
+    return [r.tokens_out for r in sorted(rep.requests,
+                                         key=lambda r: r.req_id)]
+
+
+# ---------------------------------------------------------------------------
+# satellite 1: block_for group-signature regression + clamp
+# ---------------------------------------------------------------------------
+
+def test_block_for_tuned_table_requires_uniform_group():
+    """Pre-fix, the AOT-table lookup keyed on exact_key(shapes[0]) only: a
+    tile tuned for SA alone was silently imposed on a mixed [SA, SB] group
+    (and [SB, SA] fell through — order-dependent tiling for the SAME
+    group). The table must apply iff every member shares the tuned key."""
+    tuned = BlockConfig(64, 256, 512)
+    coal = Coalescer(CM, tuned_blocks={exact_key(SA): tuned})
+    assert coal.block_for([SA]) == tuned
+    assert coal.block_for([SA, SA]) == tuned          # uniform group: applies
+    mixed = coal.block_for([SA, SB])
+    assert mixed != tuned                              # mixed group: heuristic
+    assert mixed == coal.block_for([SB, SA])           # and order-independent
+
+
+def test_block_for_clamp():
+    """The default tile clamps to the (padded) problem, MXU-aligned:
+    bn = max(8, min(128, n)) — the dead pre-fix ``min(128, max(128, n))``
+    always returned 128 even for n < 128."""
+    coal = Coalescer(CM)
+    assert coal.block_for([GemmShape(8, 4, 256)]).bn == 8
+    assert coal.block_for([GemmShape(8, 64, 256)]).bn == 64
+    assert coal.block_for([GemmShape(8, 512, 256)]).bn == 128
+    b = coal.block_for([SA, SB])
+    assert b.bm == 128 and b.bk == DEFAULT_BLOCK.bk
+
+
+# ---------------------------------------------------------------------------
+# tune_group objectives (Table 1 direction at coalesced-group granularity)
+# ---------------------------------------------------------------------------
+
+def test_tune_group_objectives_diverge():
+    at = Autotuner(CM)
+    collab = at.tune_group(WITNESS, "collaborative")
+    greedy = at.tune_group(WITNESS, "greedy")
+    assert collab != greedy
+    # collaborative wins the coalesced group, greedy wins isolated
+    env = WITNESS[0]
+    assert CM.coalesced_time(WITNESS, collab) < CM.coalesced_time(WITNESS,
+                                                                  greedy)
+    assert CM.gemm_time(env, greedy) < CM.gemm_time(env, collab)
+
+
+def test_tune_group_envelope_is_max_extents():
+    """A mixed group tunes against the envelope (max extents), so the tuned
+    tile is always VALID for every padded member (pow2, VMEM-bounded)."""
+    at = Autotuner(CM)
+    b = at.tune_group([SA, SB], "collaborative")
+    for v in (b.bm, b.bn, b.bk):
+        assert v & (v - 1) == 0
+    assert b.vmem_usage(max(SA.k, SB.k), 4) <= CM.device.vmem_bytes
+
+
+# ---------------------------------------------------------------------------
+# LiveTuner cache lifecycle: stable hits, churn re-tune, device isolation
+# ---------------------------------------------------------------------------
+
+def test_live_tuner_stable_group_hits():
+    pc = PlanCache(32)
+    lt = LiveTuner(CM, pc)
+    g = [SA] * 4
+    b = lt.tune(g)
+    assert (pc.stats.misses, pc.stats.hits) == (1, 0)
+    for _ in range(5):                       # steady state: pure cache hits
+        assert lt.tune(list(g)) == b
+    assert (pc.stats.misses, pc.stats.hits) == (1, 5)
+    assert pc.stats.hit_rate == pytest.approx(5 / 6)
+
+
+def test_live_tuner_churn_retunes_once_and_keeps_previous():
+    """Group churn 8 -> 5 tenants: the new signature tunes ONCE; the old
+    signature's entry stays served (churn back = hit, no re-search)."""
+    pc = PlanCache(32)
+    lt = LiveTuner(CM, pc)
+    g8, g5 = [SA] * 8, [SA] * 5
+    b8 = lt.tune(g8)
+    b5 = lt.tune(g5)                          # churn: one fresh search
+    assert pc.stats.misses == 2
+    assert pc.peek(lt.key_for(g8)).block == b8    # previous config intact
+    assert pc.peek(lt.key_for(g5)).block == b5
+    assert lt.tune(g8) == b8 and lt.tune(g5) == b5
+    assert pc.stats.misses == 2 and pc.stats.hits == 2
+    assert pc.stats.invalidations == 0
+
+
+def test_live_tuner_device_keyed_isolation():
+    """One shared tune cache, two devices with heterogeneous profiles: the
+    device id in every key keeps them from serving each other's tiles."""
+    pc = PlanCache(32)
+    t0 = LiveTuner(CostModel(V100), pc, device_id=0)
+    t1 = LiveTuner(CostModel(TPUV5E), pc, device_id=1)
+    g = [SA] * 4
+    b0, b1 = t0.tune(g), t1.tune(g)
+    assert t0.key_for(g) != t1.key_for(g)
+    assert pc.stats.misses == 2 and pc.stats.hits == 0
+    assert b0 != b1                  # the profiles genuinely tune apart
+    # steady state stays per-device
+    assert t0.tune(g) == b0 and t1.tune(g) == b1
+    assert pc.stats.hits == 2
+
+
+def test_live_tuner_objective_in_key():
+    """Collaborative and greedy results coexist in one cache."""
+    pc = PlanCache(32)
+    tc = LiveTuner(CM, pc, objective="collaborative")
+    tg = LiveTuner(CM, pc, objective="greedy")
+    bc, bg = tc.tune(WITNESS), tg.tune(WITNESS)
+    assert pc.stats.misses == 2
+    assert bc != bg
+    assert pc.peek(tc.key_for(WITNESS)).objective == "collaborative"
+    assert pc.peek(tg.key_for(WITNESS)).objective == "greedy"
+
+
+def test_group_signature_is_params_free():
+    sig = group_signature([SA, SB])
+    assert sig == ((784, 512, 1152, 4, 1), (32, 128, 1152, 4, 1))
+
+
+# ---------------------------------------------------------------------------
+# serving acceptance: identity, steady-state hits, hot-swap immunity
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def gemma():
+    cfg = smoke_config("gemma3-1b")
+    m = Model(cfg, param_dtype=jnp.float32)
+    return m, m.init(jax.random.PRNGKey(0))
+
+
+def _engine(gemma, names, **kw):
+    m, p = gemma
+    return ServingEngine([Tenant(n, m, p, cache_len=64, max_batch=2)
+                          for n in names], mode="vliw", **kw)
+
+
+def _trace(names, steps=6):
+    return two_wave_trace(list(names), [], 1e-5, prompt_len=8,
+                          max_new_tokens=steps, slo_s=10.0)
+
+
+def test_engine_live_tune_token_identity_and_hits(gemma):
+    names = ["a", "b", "c", "d"]
+    base = _engine(gemma, names).run(_trace(names))
+    for objective in ("collaborative", "greedy"):
+        eng = _engine(gemma, names, live_tune=True, tune_objective=objective)
+        rep = eng.run(_trace(names))
+        # live tuning retiles dispatches but must not change a single token
+        assert _tokens(rep) == _tokens(base)
+        st = eng.jit.tune_cache.stats
+        # steady state: one search per distinct signature, hits after
+        assert st.misses == len(eng.jit.tuner.results) > 0
+        assert st.hits > st.misses
+        assert eng.jit.tune_cache.stats.invalidations == 0
+        # report plumbing: the run's JitStats carry the tune-cache delta
+        assert rep.jit.tune_cache.accesses == st.accesses
+
+
+def test_engine_hot_swap_leaves_tuned_configs_intact(gemma):
+    """Tuning keys are shapes-only: a weight hot-swap invalidates block
+    plans / packed weights but must not evict or re-tune a single config."""
+    m, p = gemma
+    eng = _engine(gemma, ["a", "b"], live_tune=True)
+    eng.run(_trace(["a", "b"]))
+    pc = eng.jit.tune_cache
+    before = {k: pc.peek(k).block for k in pc.keys()}
+    assert before
+    misses0 = pc.stats.misses
+    eng.tenants["a"].params = Model(m.cfg, param_dtype=jnp.float32).init(
+        jax.random.PRNGKey(7))                       # hot-swap
+    eng.run(_trace(["a", "b"]))
+    assert pc.stats.invalidations == 0
+    assert pc.stats.misses == misses0        # zero re-tunes: all signatures known
+    for k, b in before.items():
+        assert pc.peek(k).block == b
+
+
+def test_engine_mesh_tuning_is_device_keyed(gemma):
+    names = ["a", "b", "c", "d"]
+    eng = _engine(gemma, names, live_tune=True, num_devices=2)
+    eng.run(_trace(names, steps=4))
+    keys = eng.jit.tune_cache.keys()
+    assert keys and all(k[0] == "tune" for k in keys)
+    # both mesh devices tuned their own groups under their own key space
+    assert {k[1] for k in keys} == {0, 1}
