@@ -33,7 +33,6 @@ Run:  PYTHONPATH=src python benchmarks/compiled_autotune_bench.py [--quick]
 from __future__ import annotations
 
 import argparse
-import copy
 import sys
 import time
 
@@ -94,7 +93,7 @@ def bench_serving(n_tenants: int, steps: int):
                                       tune_objective="greedy"))):
         engines[label] = mk_engine(**kw)
         t0 = time.perf_counter()
-        reps[label] = engines[label].run(copy.deepcopy(trace))
+        reps[label] = engines[label].run(trace)
         wall = time.perf_counter() - t0
         # snapshot: ServeReport.jit aliases the engine's LIVE cumulative
         # stats, which the steady-state rerun below keeps mutating
@@ -110,7 +109,7 @@ def bench_serving(n_tenants: int, steps: int):
     jit = engines["collab"].jit
     tune_base = jit.tune_cache.stats.copy()
     dispatch_base = jit.executor.stats.copy()
-    rep2 = engines["collab"].run(copy.deepcopy(trace))
+    rep2 = engines["collab"].run(trace)
     rerun = {"tune": jit.tune_cache.stats - tune_base,
              "retraces": jit.executor.stats.retraces
                          - dispatch_base.retraces}

@@ -24,7 +24,6 @@ Run:  PYTHONPATH=src python benchmarks/dispatch_bench.py [--quick]
 from __future__ import annotations
 
 import argparse
-import copy
 import sys
 import time
 
@@ -148,7 +147,7 @@ def bench_serving_identity(max_new_tokens: int):
              Tenant("b", m2, p2, cache_len=32, max_batch=2)], mode="vliw",
             certify=True)
         eng.jit.executor.enabled = enabled
-        reps[name] = eng.run(copy.deepcopy(trace))
+        reps[name] = eng.run(trace)
     hit_rate = reps["cached"].jit.dispatch.weight_hit_rate
     jit = reps["cached"].jit.merge(reps["eager"].jit)
     emit("dispatch/serving_identity",

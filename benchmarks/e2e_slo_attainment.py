@@ -1,38 +1,88 @@
-"""End-to-end §5.2: multi-tenant serving with SLOs under the three engine
-modes (time-multiplexed, per-tenant batched, VLIW JIT). Real token
-generation through reduced models; time attributed by the TPU-v5e device
-model. Greedy tokens must agree across modes (asserted)."""
+"""End-to-end §5.2 + the serving front door (ISSUE 10 acceptance).
+
+Part 1 (seed): multi-tenant serving with SLOs under the three engine modes
+(time-multiplexed, per-tenant batched, VLIW JIT). Real token generation
+through reduced models; time attributed by the TPU-v5e device model.
+Greedy tokens must agree across modes.
+
+Part 2 (front door): SLO attainment and goodput vs offered load. An
+open-loop tiered trace is served at three load levels — under, at and far
+past the saturation knee (multiples of the analytic per-request cost) —
+once with SLO-tiered admission control at the door (admit / degrade /
+shed from the cost model + arrival forecast) and once with the
+admit-everything ablation.
+
+Acceptance (checked by ``run()`` / ``main()``; ``--quick`` is the CI smoke
+gate — both modes exit nonzero on failure):
+
+  * tokens bit-identical across the three engine modes (seed gate),
+  * past the knee, admission control beats admit-everything on goodput
+    AND on overall + per-tier SLO attainment (the loosest/batch rung —
+    the door's designated degrade/shed sacrifice tier — is allowed a
+    small bounded dip); far past the knee the door must shed,
+  * shed requests are counted as SLO misses in reported attainment
+    (never silently dropped from the denominator),
+  * tokens bit-identical on the admitted set: admission changes WHO runs,
+    never the math of what runs,
+  * the daemon loop (``serve_forever`` on a follower VirtualClock, door
+    pre-scheduled with the same trace) reproduces the replay run
+    bit-identically — same tokens, same shed set.
+
+Also writes the JSON summary CI uploads as a workflow artifact.
+
+Run:  PYTHONPATH=src python benchmarks/e2e_slo_attainment.py [--quick]
+"""
 from __future__ import annotations
 
-import copy
+import argparse
+import dataclasses
+import sys
 
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import emit
+try:                                     # via the run.py harness
+    from benchmarks.common import emit, header, write_summary
+except ImportError:                      # standalone: python benchmarks/...
+    from common import emit, header, write_summary
+
 from repro.configs import smoke_config
 from repro.models import Model
-from repro.serving import ServingEngine, Tenant, make_trace
+from repro.serving import (FrontDoor, ServeRequest, ServingEngine, Tenant,
+                           VirtualClock, make_trace, open_loop_trace)
+
+# offered load as multiples of the modeled per-request service rate:
+# comfortably under the knee, around it, and far past it
+LOAD_LEVELS = (0.5, 2.0, 8.0)
+KNEE = 1.0          # levels strictly above this must show dominance
 
 
-def run() -> None:
-    rng = jax.random.PRNGKey(0)
-
-    def mk(arch, seed):
+def _models():
+    models = {}
+    for arch, seed in (("gemma3-1b", 1), ("yi-9b", 2)):
         cfg = smoke_config(arch)
         m = Model(cfg, param_dtype=jnp.float32)
-        return m, m.init(jax.random.PRNGKey(seed))
+        models[arch] = (m, m.init(jax.random.PRNGKey(seed)))
+    return models
 
-    m1, p1 = mk("gemma3-1b", 1)
-    m2, p2 = mk("yi-9b", 2)
+
+def _tenants(models):
+    return [Tenant("t1", *models["gemma3-1b"], cache_len=32, max_batch=4),
+            Tenant("t2", *models["yi-9b"], cache_len=32, max_batch=4)]
+
+
+def _tokens(rep):
+    return {r.req_id: tuple(r.tokens_out or ()) for r in rep.requests}
+
+
+def bench_modes(models):
+    """Seed section: the three engine modes on one SLO trace."""
     trace = make_trace(["t1", "t2"], rate_hz=1e5, n_per_tenant=3,
                        prompt_len=8, max_new_tokens=4, slo_s=0.002)
     tokens = {}
     for mode in ("time", "batched", "vliw"):
-        tenants = [Tenant("t1", m1, p1, cache_len=32, max_batch=4),
-                   Tenant("t2", m2, p2, cache_len=32, max_batch=4)]
-        eng = ServingEngine(tenants, mode=mode)
-        rep = eng.run(copy.deepcopy(trace))
+        eng = ServingEngine(_tenants(models), mode=mode)
+        rep = eng.run(trace)
         tokens[mode] = [r.tokens_out for r in
                         sorted(rep.requests, key=lambda r: r.req_id)]
         extra = ""
@@ -48,6 +98,187 @@ def run() -> None:
              f";p99_us={rep.p_latency(0.99)*1e6:.0f}"
              f";slo={rep.slo_attainment:.2f}"
              f";tok_s={rep.tokens_per_s:.0f}{extra}")
-    assert tokens["time"] == tokens["batched"] == tokens["vliw"], \
-        "greedy tokens diverged across engine modes"
-    emit("e2e/token_consistency", 0.0, "all_modes_identical=True")
+    return tokens
+
+
+def bench_front_door(models, n_requests: int):
+    """Front-door section: attainment/goodput vs offered load, admission
+    control vs the admit-everything ablation, plus the daemon-equals-
+    replay check at the top load level."""
+    probe = ServingEngine(_tenants(models), mode="vliw")
+    cost = probe._request_cost_s(
+        probe.tenants["t1"], ServeRequest(0, "t1", 0.0, 8, 2, 1.0))
+    # tier SLOs in units of the modeled per-request cost: a tight
+    # interactive rung, a standard rung, and a wide batch rung — wide
+    # enough that requests the door degrades into it can still retire
+    # inside their (relaxed) deadline
+    tiers = (4 * cost, 10 * cost, 30 * cost)
+    sweep = {}
+    for mult in LOAD_LEVELS:
+        trace = open_loop_trace(
+            ["t1", "t2"], rate_hz=mult / cost, n=n_requests,
+            shape="poisson", tier_slo_s=tiers, prompt_len=8,
+            max_new_tokens=2, seed=7)
+        reps = {}
+        for policy, admit in (("admission", True), ("admit_all", False)):
+            eng = ServingEngine(_tenants(models), mode="vliw",
+                                admission_control=admit)
+            rep = eng.run(trace)
+            reps[policy] = rep
+            by_tier = ";".join(
+                f"tier{t}={a:.2f}"
+                for t, a in rep.tier_attainment().items())
+            emit(f"e2e_slo/load={mult:g}x/{policy}",
+                 rep.modeled_time_s * 1e6,
+                 f"slo={rep.slo_attainment:.2f}"
+                 f";goodput_rps={rep.goodput_rps:.0f}"
+                 f";shed={rep.shed};unfinished={rep.unfinished}"
+                 f";p99_us={rep.p_latency(0.99)*1e6:.0f};{by_tier}")
+        sweep[mult] = (trace, reps)
+
+    # daemon-equals-replay at the top load level: pre-scheduled door on a
+    # follower VirtualClock through the SAME admission controller
+    top = max(LOAD_LEVELS)
+    trace, reps = sweep[top]
+    eng = ServingEngine(_tenants(models), mode="vliw",
+                        admission_control=True)
+    door = FrontDoor()
+    for r in trace:
+        door.submit(dataclasses.replace(r), at=r.arrival_t)
+    door.close(at=max(r.arrival_t for r in trace))
+    rep_daemon = eng.serve_forever(door, clock=VirtualClock())
+    emit(f"e2e_slo/daemon/load={top:g}x", rep_daemon.modeled_time_s * 1e6,
+         f"slo={rep_daemon.slo_attainment:.2f}"
+         f";goodput_rps={rep_daemon.goodput_rps:.0f}"
+         f";shed={rep_daemon.shed}")
+    return sweep, rep_daemon
+
+
+def check(mode_tokens, sweep, rep_daemon) -> bool:
+    ok = True
+    if not (mode_tokens["time"] == mode_tokens["batched"]
+            == mode_tokens["vliw"]):
+        print("FAIL: greedy tokens diverged across engine modes",
+              file=sys.stderr)
+        ok = False
+    past_knee = [m for m in sweep if m > KNEE]
+    for mult in past_knee:
+        _, reps = sweep[mult]
+        ctl, all_ = reps["admission"], reps["admit_all"]
+        if not (ctl.goodput_rps > all_.goodput_rps):
+            print(f"FAIL: load={mult}x goodput inversion: admission "
+                  f"{ctl.goodput_rps:.0f} <= admit-all "
+                  f"{all_.goodput_rps:.0f} rps", file=sys.stderr)
+            ok = False
+        if not (ctl.slo_attainment > all_.slo_attainment):
+            print(f"FAIL: load={mult}x attainment inversion: admission "
+                  f"{ctl.slo_attainment:.2f} <= admit-all "
+                  f"{all_.slo_attainment:.2f}", file=sys.stderr)
+            ok = False
+        # per-tier dominance (original-tier grouping: the door's ledger).
+        # The loosest rung is the door's designated sacrifice tier — it
+        # absorbs degraded traffic and sheds first — so it is allowed a
+        # bounded dip; every tighter tier must show no inversion.
+        t_ctl, t_all = ctl.tier_attainment(), all_.tier_attainment()
+        loosest = max(t_all)
+        for tier in t_all:
+            slack = 0.25 if tier == loosest else 0.0
+            if t_ctl.get(tier, 0.0) < t_all[tier] - slack:
+                print(f"FAIL: load={mult}x tier {tier} attainment "
+                      f"inversion: {t_ctl.get(tier, 0.0):.2f} < "
+                      f"{t_all[tier]:.2f}", file=sys.stderr)
+                ok = False
+        # far past the knee the door must actually refuse work; at the
+        # intermediate level degrading alone may already clear the backlog
+        if mult == max(past_knee) and ctl.shed == 0:
+            print(f"FAIL: load={mult}x past the knee shed nothing — the "
+                  f"door is not making admit/shed decisions",
+                  file=sys.stderr)
+            ok = False
+        # shed counts as a miss in the reported number
+        met = sum(r.met_slo for r in ctl.requests)
+        if abs(ctl.slo_attainment - met / len(ctl.requests)) > 1e-12 \
+                or any(r.met_slo for r in ctl.requests if r.shed):
+            print(f"FAIL: load={mult}x shed requests not counted as "
+                  f"misses in attainment", file=sys.stderr)
+            ok = False
+        # token bit-identity on the admitted set (vs admit-everything)
+        toks_all = {r.req_id: tuple(r.tokens_out or ())
+                    for r in all_.requests}
+        for r in ctl.requests:
+            if r.tokens_out is not None and toks_all.get(r.req_id):
+                if tuple(r.tokens_out) != toks_all[r.req_id]:
+                    print(f"FAIL: load={mult}x req {r.req_id} tokens "
+                          f"diverged under admission control",
+                          file=sys.stderr)
+                    ok = False
+                    break
+    # the daemon on a follower clock reproduces the replay bit-identically
+    top = max(sweep)
+    ctl_top = sweep[top][1]["admission"]
+    if {r.req_id: tuple(r.tokens_out or ()) for r in rep_daemon.requests} \
+            != {r.req_id: tuple(r.tokens_out or ())
+                for r in ctl_top.requests}:
+        print("FAIL: daemon (VirtualClock door) tokens diverged from "
+              "replay", file=sys.stderr)
+        ok = False
+    if {r.req_id for r in rep_daemon.requests if r.shed} \
+            != {r.req_id for r in ctl_top.requests if r.shed}:
+        print("FAIL: daemon shed set diverged from replay",
+              file=sys.stderr)
+        ok = False
+
+    top_reps = sweep[top][1]
+    write_summary("e2e_slo", {
+        "ok": ok,
+        "tokens_identical_across_modes":
+            mode_tokens["time"] == mode_tokens["vliw"],
+        "load_levels": list(sweep),
+        "knee": KNEE,
+        **{f"slo_attainment_{m:g}x_{p}": reps[p].slo_attainment
+           for m, (_, reps) in sweep.items() for p in reps},
+        **{f"goodput_rps_{m:g}x_{p}": reps[p].goodput_rps
+           for m, (_, reps) in sweep.items() for p in reps},
+        "shed_past_knee": {f"{m:g}x": sweep[m][1]["admission"].shed
+                           for m in past_knee},
+        "degraded_past_knee": {
+            f"{m:g}x": sum(1 for r in sweep[m][1]["admission"].requests
+                           if r.degraded_from is not None)
+            for m in past_knee},
+        "tier_attainment_top_admission":
+            {str(t): a for t, a in
+             top_reps["admission"].tier_attainment().items()},
+        "tier_attainment_top_admit_all":
+            {str(t): a for t, a in
+             top_reps["admit_all"].tier_attainment().items()},
+        "daemon_matches_replay":
+            {r.req_id for r in rep_daemon.requests if r.shed}
+            == {r.req_id for r in ctl_top.requests if r.shed},
+    })
+    return ok
+
+
+def run() -> None:
+    """Entry point for the benchmarks/run.py harness."""
+    models = _models()
+    mode_tokens = bench_modes(models)
+    sweep, rep_daemon = bench_front_door(models, n_requests=36)
+    assert check(mode_tokens, sweep, rep_daemon), \
+        "e2e SLO front-door acceptance failed"
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="small configuration for the CI smoke run")
+    args = ap.parse_args()
+    n = 24 if args.quick else 48
+    header()
+    models = _models()
+    mode_tokens = bench_modes(models)
+    sweep, rep_daemon = bench_front_door(models, n_requests=n)
+    return 0 if check(mode_tokens, sweep, rep_daemon) else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

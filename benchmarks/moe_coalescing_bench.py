@@ -27,7 +27,6 @@ Run:  PYTHONPATH=src python benchmarks/moe_coalescing_bench.py [--quick]
 from __future__ import annotations
 
 import argparse
-import copy
 import sys
 
 import jax
@@ -73,7 +72,7 @@ def bench(max_new_tokens: int, n_per_tenant: int):
         # MoE expert-GEMM coalescing this bench gates on must be provably
         # hazard-free, not just token-identical
         eng = ServingEngine(_tenants(), mode=mode, certify=(mode == "vliw"))
-        reps[mode] = eng.run(copy.deepcopy(trace))
+        reps[mode] = eng.run(trace)
         extra = ""
         if reps[mode].jit:
             j = reps[mode].jit

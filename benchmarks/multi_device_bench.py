@@ -27,7 +27,6 @@ Run:  PYTHONPATH=src python benchmarks/multi_device_bench.py [--quick]
 from __future__ import annotations
 
 import argparse
-import copy
 import sys
 
 import jax
@@ -77,7 +76,7 @@ def bench(max_new_tokens: int, n_per_tenant: int):
     for n_dev in (1, 2, 4):
         eng = ServingEngine(_tenants(), mode="vliw", num_devices=n_dev,
                             certify=True)
-        rep = eng.run(copy.deepcopy(trace))
+        rep = eng.run(trace)
         runs[n_dev] = (rep, eng.last_trace)
         j = rep.jit
         util = ",".join(f"{u:.2f}" for u in rep.device_util)

@@ -19,7 +19,6 @@ prefill (or breaks token identity) fails CI.
 from __future__ import annotations
 
 import argparse
-import copy
 import sys
 
 import jax
@@ -65,7 +64,7 @@ def bench(prompt_len: int, max_new_tokens: int, n_per_tenant: int):
             ("vliw", dict(mode="vliw"))]
     for name, kw in runs:
         eng = ServingEngine(tenants(), **kw)
-        reps[name] = eng.run(copy.deepcopy(trace))
+        reps[name] = eng.run(trace)
         if name == "vliw":
             vliw_jit = eng.jit
         extra = ""

@@ -7,7 +7,6 @@ trace under all three multiplexing regimes and prints the paper's comparison
 
 Run:  PYTHONPATH=src python examples/multi_tenant_serving.py
 """
-import copy
 
 import jax
 import jax.numpy as jnp
@@ -40,7 +39,7 @@ def main() -> None:
                    Tenant("code", m2, p2, cache_len=32, max_batch=4),
                    Tenant("summarize", m3, p3, cache_len=32, max_batch=4)]
         eng = ServingEngine(tenants, mode=mode)
-        rep = eng.run(copy.deepcopy(trace))
+        rep = eng.run(trace)
         results[mode] = rep
         line = (f"{mode:8s} modeled={rep.modeled_time_s*1e3:7.3f} ms  "
                 f"mean_lat={rep.mean_latency*1e3:7.3f} ms  "
@@ -78,7 +77,7 @@ def main() -> None:
         eng = ServingEngine([Tenant("w1", m1, p1, cache_len=32, max_batch=2),
                              Tenant("w2", m1, p1, cache_len=32, max_batch=2)],
                             mode="vliw", sched_cfg=sc)
-        rep = eng.run(copy.deepcopy(staged))
+        rep = eng.run(staged)
         print(f"  {label:10s} waits={rep.jit.waits:2d} "
               f"mean_group={rep.jit.mean_group:.2f} "
               f"superkernels={rep.jit.superkernels} "

@@ -4,21 +4,136 @@ Smoke mode runs reduced models on CPU with real token generation; the
 ``--mode`` flag selects the multiplexing regime so the paper's comparison
 can be reproduced from the command line.
 
-Usage:
+Usage (trace replay — finite trace, virtual time):
   PYTHONPATH=src python -m repro.launch.serve \
       --tenants gemma3-1b yi-9b --mode vliw --requests 8 --rate 1e4
+
+Usage (daemon mode — the real-clock serving front door):
+  PYTHONPATH=src python -m repro.launch.serve \
+      --tenants gemma3-1b yi-9b --daemon --duration 5 --rate 20 \
+      --admission --stats-interval 1
+
+``--daemon`` opens a ``FrontDoor`` on the real wall clock and serves until
+``--duration`` seconds have elapsed (a feeder thread submits open-loop
+Poisson traffic at ``--rate``; tokens stream out per request as they
+retire). ``--admission`` turns on the SLO-tiered admission controller:
+each request is admitted / degraded to a lower tier / shed AT THE DOOR
+from the analytic cost model + arrival forecast, and the final report
+shows per-tier attainment, goodput and shed counts (shed requests count
+as SLO misses). ``--stats-interval`` prints a live heartbeat line while
+the daemon runs.
+
+Note on real-clock attainment: the daemon floors the modeled device
+timelines at REAL elapsed time, and on a CPU smoke host actually
+executing the reduced models takes orders of magnitude longer than the
+modeled TPU-v5e service times — so millisecond-scale ``--slo-ms``
+deadlines will all miss and attainment reads 0%. That is the clock
+semantics working, not a bug; pass a host-realistic ``--slo-ms`` (or use
+the virtual-clock bench ``benchmarks/e2e_slo_attainment.py``, which
+replays the door deterministically on modeled time) to study attainment.
 """
 from __future__ import annotations
 
 import argparse
-import copy
+import threading
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs import ARCH_IDS, smoke_config
 from repro.models import Model
-from repro.serving import ServingEngine, Tenant, make_trace
+from repro.serving import (FrontDoor, ServeRequest, ServingEngine, Tenant,
+                           make_trace)
+
+
+def _build_models(arch_names):
+    models = {}
+    for i, arch in enumerate(dict.fromkeys(arch_names)):
+        cfg = smoke_config(arch)
+        m = Model(cfg, param_dtype=jnp.float32)
+        models[arch] = (m, m.init(jax.random.PRNGKey(i + 1)))
+    return models
+
+
+def _make_tenants(names, archs, models, args):
+    return [Tenant(n, *models[a], cache_len=max(
+        32, args.prompt_len + args.max_new_tokens + 1), max_batch=4)
+        for n, a in zip(names, archs)]
+
+
+def _report_line(mode, rep, certify):
+    line = (f"{mode:8s} modeled={rep.modeled_time_s*1e3:8.3f} ms  "
+            f"mean_lat={rep.mean_latency*1e3:7.3f} ms  "
+            f"p99={rep.p_latency(0.99)*1e3:7.3f} ms  "
+            f"SLO={rep.slo_attainment:5.1%}  "
+            f"tok/s={rep.tokens_per_s:9.0f}")
+    if rep.jit:
+        d = rep.jit.dispatch
+        line += (f"  [superkernels={rep.jit.superkernels} "
+                 f"group={rep.jit.mean_group:.2f} "
+                 f"shared={rep.jit.shared_dispatches} "
+                 f"wpack_hit={d.weight_hit_rate:.0%} "
+                 f"retraces={d.retraces}]")
+        if certify:
+            line += (f"  [certified: checks={rep.jit.hazard_checks} "
+                     f"violations={rep.jit.hazard_violations}]")
+    return line
+
+
+def _run_daemon(names, args, models) -> None:
+    tenants = _make_tenants(names, args.tenants, models, args)
+    eng = ServingEngine(tenants, mode="vliw", certify=args.certify,
+                        num_devices=args.num_devices,
+                        admission_control=args.admission)
+    door = FrontDoor()
+
+    def feeder() -> None:
+        # open-loop Poisson feeder on the real clock: arrivals keep
+        # coming at --rate regardless of completions, until --duration
+        rng = np.random.default_rng(0)
+        deadline = args.duration
+        t, rid = 0.0, 0
+        import time as _t
+        t0 = _t.monotonic()
+        while True:
+            t += rng.exponential(1.0 / args.rate)
+            if t >= deadline:
+                break
+            pause = t - (_t.monotonic() - t0)
+            if pause > 0:
+                _t.sleep(pause)
+            tier = int(rng.choice(3, p=[0.5, 0.3, 0.2]))
+            door.submit(ServeRequest(
+                rid, names[rid % len(names)], 0.0, args.prompt_len,
+                args.max_new_tokens, slo_s=args.slo_ms / 1e3 * (2 ** tier),
+                tier=tier))
+            rid += 1
+        door.close()
+
+    def heartbeat(stats) -> None:
+        print(f"  [t={stats['t']:6.2f}s] submitted={stats['submitted']:4d} "
+              f"finished={stats['finished']:4d} shed={stats['shed']:3d} "
+              f"inflight={stats['inflight']} waiting={stats['waiting']}")
+
+    print(f"daemon: {len(names)} tenants, {args.rate:.0f} req/s open-loop "
+          f"for {args.duration:.1f}s, admission="
+          f"{'on' if args.admission else 'off'}\n")
+    th = threading.Thread(target=feeder, daemon=True)
+    th.start()
+    rep = eng.serve_forever(door, on_stats=heartbeat,
+                            stats_interval_s=args.stats_interval)
+    th.join()
+    print()
+    print(_report_line("daemon", rep, args.certify))
+    print(f"  served={len(rep.requests)} shed={rep.shed} "
+          f"unfinished={rep.unfinished} "
+          f"goodput={rep.goodput_rps:.1f} req/s")
+    for tier, att in rep.tier_attainment().items():
+        n = sum(1 for r in rep.requests
+                if (r.degraded_from if r.degraded_from is not None
+                    else r.tier) == tier)
+        print(f"  tier {tier}: attainment={att:5.1%}  n={n}")
 
 
 def main() -> None:
@@ -43,15 +158,26 @@ def main() -> None:
                     help="record a ScheduleTrace and run the hazard "
                          "certifier per tick (vliw mode); raises on the "
                          "first illegal reordering")
+    ap.add_argument("--daemon", action="store_true",
+                    help="real-clock front door: serve open-loop traffic "
+                         "from a feeder thread until --duration elapses "
+                         "(vliw mode only)")
+    ap.add_argument("--duration", type=float, default=5.0,
+                    help="daemon: seconds to keep the door open")
+    ap.add_argument("--admission", action="store_true",
+                    help="daemon: SLO-tiered admission control at the door "
+                         "(admit / degrade / shed from the cost model)")
+    ap.add_argument("--stats-interval", type=float, default=1.0,
+                    help="daemon: seconds between live heartbeat lines")
     args = ap.parse_args()
 
-    models = {}
-    for i, arch in enumerate(dict.fromkeys(args.tenants)):
-        cfg = smoke_config(arch)
-        m = Model(cfg, param_dtype=jnp.float32)
-        models[arch] = (m, m.init(jax.random.PRNGKey(i + 1)))
-
+    models = _build_models(args.tenants)
     names = [f"t{i}:{a}" for i, a in enumerate(args.tenants)]
+
+    if args.daemon:
+        _run_daemon(names, args, models)
+        return
+
     trace = make_trace(names, rate_hz=args.rate, n_per_tenant=args.requests,
                        prompt_len=args.prompt_len,
                        max_new_tokens=args.max_new_tokens,
@@ -61,31 +187,15 @@ def main() -> None:
 
     modes = ["time", "batched", "vliw"] if args.mode == "all" else [args.mode]
     for mode in modes:
-        tenants = [Tenant(n, *models[a], cache_len=max(
-            32, args.prompt_len + args.max_new_tokens + 1), max_batch=4)
-            for n, a in zip(names, args.tenants)]
+        tenants = _make_tenants(names, args.tenants, models, args)
         # baseline modes define single-device round semantics; the mesh is
         # a vliw-engine feature
         n_dev = args.num_devices if mode == "vliw" else 1
         eng = ServingEngine(tenants, mode=mode, certify=args.certify,
                             num_devices=n_dev)
-        rep = eng.run(copy.deepcopy(trace))
-        line = (f"{mode:8s} modeled={rep.modeled_time_s*1e3:8.3f} ms  "
-                f"mean_lat={rep.mean_latency*1e3:7.3f} ms  "
-                f"p99={rep.p_latency(0.99)*1e3:7.3f} ms  "
-                f"SLO={rep.slo_attainment:5.1%}  "
-                f"tok/s={rep.tokens_per_s:9.0f}")
-        if rep.jit:
-            d = rep.jit.dispatch
-            line += (f"  [superkernels={rep.jit.superkernels} "
-                     f"group={rep.jit.mean_group:.2f} "
-                     f"shared={rep.jit.shared_dispatches} "
-                     f"wpack_hit={d.weight_hit_rate:.0%} "
-                     f"retraces={d.retraces}]")
-            if args.certify:
-                line += (f"  [certified: checks={rep.jit.hazard_checks} "
-                         f"violations={rep.jit.hazard_violations}]")
-        print(line)
+        # run() copies the trace internally — safe to reuse across modes
+        rep = eng.run(trace)
+        print(_report_line(mode, rep, args.certify))
         if rep.jit and rep.num_devices > 1:
             # per-device mesh breakdown: utilization + coalesced groups
             # (from the recorded trace when --certify) + placement

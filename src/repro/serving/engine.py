@@ -79,6 +79,42 @@ Continuous batching mechanics: each tenant owns a slotted decode cache
 (real ``Model.prefill``) and writes its KV rows into a free slot; completed
 requests free their slot mid-flight — per-row ``pos`` makes mixed-depth
 batches correct (models/attention.py).
+
+The front door (daemon mode + admission control)
+------------------------------------------------
+
+``engine.run`` replays a finite trace in virtual time and terminates when
+it is exhausted. ``engine.serve_forever(door)`` is the production front
+door: a long-lived loop over the SAME per-device event-loop machinery
+that accepts continuous admission from a ``FrontDoor`` on a real clock
+(``serving/frontdoor.py``), streams each request's tokens out as they
+retire (``token_sink`` / per-request ``Ticket``), IDLES while the door is
+open and empty (the replay stall guard becomes a wait), and flushes
+in-flight work then terminates cleanly once the door closes.
+
+Real-clock vs virtual-time semantics: with an authoritative clock
+(``MonotonicClock``, the default) the per-device virtual timelines are
+floored at real elapsed time each iteration, so arrival stamps, SLO
+deadlines and modeled service charges share one axis. With a follower
+``VirtualClock`` (tests / the sustained-load bench) the clock tracks the
+modeled timelines instead and a pre-scheduled door replays exactly like
+``run`` — bit-identical tokens on the admitted set.
+
+Admission control (``admission_control=True`` or an explicit
+``AdmissionController``): every request carries a priority/SLO ``tier``
+(serving/admission.py's ``TierSpec`` ladder), and when it becomes due the
+door makes an explicit decision from the analytic cost model — forecast
+completion = now + committed device backlog + modeled request cost + an
+overload margin from the ``ArrivalPredictor`` load forecast. A request
+whose tier deadline is infeasible is DEGRADED down the ladder (relaxed
+deadline it can actually keep, ``degraded_from`` records the original
+tier) or SHED at the door — so under overload accepted requests keep
+their deadlines instead of every request degrading together. Shed
+requests never occupy a slot; they count as SLO misses in
+``ServeReport.slo_attainment`` and per-tier attainment (never silently
+vanishing into ``unfinished``). The same admission path runs under
+``run`` for deterministic open-loop replay benches
+(benchmarks/e2e_slo_attainment.py gates admission-on vs admit-everything).
 """
 from __future__ import annotations
 
@@ -107,6 +143,8 @@ from repro.core.scheduler import SchedulerConfig
 from repro.core.schedtrace import ScheduleTrace
 from repro.distributed.placement import DeviceSet, PlacementPolicy
 from repro.models.model import Model
+from repro.serving.admission import AdmissionController, DEFAULT_TIERS
+from repro.serving.frontdoor import FrontDoor, MonotonicClock
 from repro.serving.workload import ServeRequest
 
 
@@ -169,29 +207,85 @@ class ServeReport:
 
     @property
     def unfinished(self) -> int:
-        """Requests that never finished (dropped / stalled / unadmittable).
-        Exposed so latency stats restricted to finished requests cannot
-        silently hide drops."""
+        """Requests that never finished (shed / dropped / stalled /
+        unadmittable). Exposed so latency stats restricted to finished
+        requests cannot silently hide drops."""
         return len(self.requests) - len(self.finished)
 
     @property
+    def shed(self) -> int:
+        """Requests the front door refused at admission (a subset of
+        ``unfinished``; they count as SLO misses, see below)."""
+        return sum(1 for r in self.requests if r.shed)
+
+    @property
     def slo_attainment(self) -> float:
-        done = self.finished
-        return sum(r.met_slo for r in done) / max(len(done), 1)
+        """Fraction of ALL requests that finished within their SLO.
+
+        The denominator is every request — shed and unfinished requests
+        count as misses (``met_slo`` is False on a NaN finish). They used
+        to be excluded entirely, which silently inflated attainment the
+        moment the front door shed or dropped anything. NOTE the
+        deliberate asymmetry with ``mean_latency``: attainment is a
+        promise-keeping ratio (a drop is a broken promise), while a mean
+        over latencies that include NaN/inf drops would be meaningless —
+        so the mean stays finished-only, with ``unfinished``/``shed``
+        published alongside it."""
+        n = len(self.requests)
+        return sum(r.met_slo for r in self.requests) / max(n, 1)
+
+    def tier_attainment(self, original: bool = True) -> Dict[int, float]:
+        """Per-tier SLO attainment (shed/unfinished count as misses).
+        ``original=True`` groups a degraded request under the tier it
+        ARRIVED with (the door's promise ledger); ``original=False``
+        groups by the tier it was served at."""
+        def tier_of(r: ServeRequest) -> int:
+            if original and r.degraded_from is not None:
+                return r.degraded_from
+            return r.tier
+        out: Dict[int, List[ServeRequest]] = {}
+        for r in self.requests:
+            out.setdefault(tier_of(r), []).append(r)
+        return {tier: sum(r.met_slo for r in grp) / len(grp)
+                for tier, grp in sorted(out.items())}
+
+    @property
+    def goodput_rps(self) -> float:
+        """SLO-met completions per modeled second — the front-door
+        acceptance metric: past the saturation knee an admit-everything
+        policy keeps its throughput but loses its goodput."""
+        met = sum(r.met_slo for r in self.requests)
+        return met / self.modeled_time_s if self.modeled_time_s else 0.0
 
     @property
     def mean_latency(self) -> float:
         """Mean latency over FINISHED requests only — an unfinished request
         has finish_t = NaN, which used to poison the whole mean. Check
-        ``unfinished`` to see how many were excluded."""
+        ``unfinished`` / ``shed`` to see how many were excluded (attainment
+        and ``p_latency`` DO count them; see ``slo_attainment``)."""
         done = self.finished
         return float(np.mean([r.latency for r in done])) if done \
             else float("nan")
 
     def p_latency(self, q: float) -> float:
-        done = self.finished
-        return float(np.quantile([r.latency for r in done], q)) if done \
-            else float("nan")
+        """Latency quantile over ALL requests: an unfinished or shed
+        request contributes +inf (it never completed), so tail percentiles
+        reflect drops instead of silently excluding them. Computed by
+        explicit linear-interpolation rank (np.quantile's interpolation
+        through inf produces NaN); matches np.quantile when every request
+        finished. NaN when the report is empty."""
+        n = len(self.requests)
+        if n == 0:
+            return float("nan")
+        lats = sorted(r.latency for r in self.finished)
+        k = len(lats)
+        pos = q * (n - 1)
+        lo, hi = int(math.floor(pos)), int(math.ceil(pos))
+        if lo >= k:
+            return math.inf
+        if hi >= k:
+            return math.inf if pos > lo else float(lats[lo])
+        return float(lats[lo] + (pos - lo) * (lats[hi] - lats[lo]))
 
     @property
     def tokens_per_s(self) -> float:
@@ -212,7 +306,13 @@ class ArrivalPredictor:
     predicts the earliest next arrival across tenants:
 
       * ``observe(tenant, t)`` folds the new inter-arrival gap into the
-        tenant's EWMA (``alpha`` weights the newest gap);
+        tenant's EWMA (``alpha`` weights the newest gap). Observations
+        need NOT be globally monotone: with N per-device admission queues
+        and a real clock, a pair of arrivals is routinely observed out of
+        order — the ABSOLUTE gap |t - last| is folded either way (it is
+        the same inter-arrival sample, seen from the other side), and
+        ``last`` tracks the max observed time. Dropping out-of-order
+        samples (the old behavior) silently starved the EWMA stale;
       * ``predict(now)`` returns min over tenants of the expected next
         arrival — ``last + gap`` while that is still in the future, else
         ``now + gap`` (restart the clock: for a memoryless/Poisson flow
@@ -227,8 +327,12 @@ class ArrivalPredictor:
 
     def observe(self, tenant: str, t: float) -> None:
         last = self._last.get(tenant)
-        if last is not None and t >= last:
-            gap = t - last
+        if last is not None:
+            # |t - last| folds out-of-order observations too (normal with
+            # per-device queues + a real clock): the reordered pair's gap
+            # is the same inter-arrival sample either way round — the old
+            # ``t >= last`` guard dropped it and let the EWMA go stale
+            gap = abs(t - last)
             prev = self._gap.get(tenant)
             self._gap[tenant] = gap if prev is None else \
                 self.alpha * gap + (1.0 - self.alpha) * prev
@@ -257,6 +361,34 @@ class ArrivalPredictor:
         return est
 
 
+@dataclasses.dataclass
+class _LoopState:
+    """Mutable state of one event-loop epoch — a ``run`` replay or an open
+    ``serve_forever`` door session. Everything the per-device pass touches
+    is factored here so both loops drive the IDENTICAL machinery; only the
+    outer termination policy differs (replay terminates on exhaustion, the
+    daemon idle-waits while the door is open and flushes on close)."""
+    rng: Any
+    sessions: List[Any]
+    trace: Optional[ScheduleTrace]
+    cert: Optional[ScheduleCertifier]
+    stream_ids: Dict[str, int]
+    id2name: Dict[int, str]
+    tenant_dev: Dict[str, int]
+    queues: List[List[ServeRequest]]     # per-device admission queues
+    pis: List[int]
+    waiting: List[List[ServeRequest]]
+    inflight: Dict[str, Any]
+    now: List[float]                     # per-device virtual clocks
+    busy: List[float]                    # analytic charges per device
+    committed: List[float]               # admission-committed horizon
+    certified: int = 0                   # dispatch records already certified
+    n_done: int = 0
+    total: int = 0
+    oracle: bool = True        # replay: trace lookahead feeds next-arrival
+    next_hint: Optional[Any] = None      # daemon: door's scheduled lookahead
+
+
 class ServingEngine:
     def __init__(self, tenants: Sequence[Tenant], mode: str = "vliw",
                  cost: Optional[CostModel] = None, max_group: int = 16,
@@ -271,7 +403,10 @@ class ServingEngine:
                  num_devices: int = 1,
                  devices: Optional[DeviceSet] = None,
                  live_tune: bool = False,
-                 tune_objective: str = "collaborative"):
+                 tune_objective: str = "collaborative",
+                 admission_control: bool = False,
+                 admission: Optional[AdmissionController] = None,
+                 token_sink: Optional[Any] = None):
         assert mode in ("time", "batched", "vliw")
         self.tenants = {t.name: t for t in tenants}
         self.mode = mode
@@ -313,6 +448,19 @@ class ServingEngine:
         # next-arrival hint changes.
         self.predict_arrivals = predict_arrivals
         self._arrival_pred = ArrivalPredictor(alpha=arrival_alpha)
+        # the front door's admit/degrade/shed policy (serving/admission.py):
+        # consulted once per request, when it becomes due in the event loop
+        # — both under serve_forever (the daemon) and under run (open-loop
+        # replay benches). None = admit everything (exact legacy behavior,
+        # and the bench's ablation baseline).
+        self.admission = admission if admission is not None else (
+            AdmissionController() if admission_control else None)
+        assert self.admission is None or mode == "vliw", \
+            "admission control lives in the vliw event loop"
+        # token streaming: called as token_sink(req, token, t) for every
+        # token the moment it retires on the modeled clock — the daemon
+        # wires the FrontDoor's per-request Ticket delivery here
+        self.token_sink = token_sink
         self.cost = cost or CostModel(TPUV5E)
         # the modeled mesh: N virtual device timelines, each with its own
         # scheduler/coalescer (ops never coalesce across devices) sharing
@@ -407,6 +555,21 @@ class ServingEngine:
             t += reps * self.cost.gemm_time(shape)
         return t + self._prefill_attn_time(cfg, prompt_len)
 
+    def _request_cost_s(self, t: Tenant, req: ServeRequest) -> float:
+        """Modeled end-to-end service cost of one request — the front
+        door's admission currency: full prefill plus the remaining decode
+        steps at the tenant's batch width (amortized: a decode step is
+        shared by up to ``max_batch`` requests, so the marginal per-token
+        cost is the batched step divided by the batch)."""
+        m = max(t.max_batch, 1)
+        per_tok = self._ops_time(t.cfg, m) / m
+        return self._prefill_time(t.cfg, req.prompt_len) \
+            + max(req.max_new_tokens - 1, 0) * per_tok
+
+    def _emit_token(self, req: ServeRequest, tok: int, t: float) -> None:
+        if self.token_sink is not None:
+            self.token_sink(req, tok, t)
+
     # ------------------------------------------------------------------
     # admission
     # ------------------------------------------------------------------
@@ -447,6 +610,7 @@ class ServingEngine:
         tok = jnp.argmax(logits[0, -1]).astype(jnp.int32)
         req.tokens_out = [int(tok)]
         dt = self._prefill_time(m.cfg, req.prompt_len)
+        self._emit_token(req, int(tok), now + dt)
         if not needs_slot:
             req.finish_t = now + dt    # done at admission: no decode steps
             return dt
@@ -467,32 +631,35 @@ class ServingEngine:
     # ------------------------------------------------------------------
     # one decode round (baseline modes only)
     # ------------------------------------------------------------------
-    def _decode_round(self) -> float:
+    def _decode_round(self, now: float = 0.0) -> float:
         live = [t for t in self.tenants.values() if t.active_slots()]
         dt = 0.0
         if self.mode == "batched":
             for t in live:
-                dt += self._tenant_batched_step(t)
+                dt += self._tenant_batched_step(t, now + dt)
         else:  # time: every active request decodes alone, serialized
             for t in live:
                 n_active = len(t.active_slots())
                 logits, t.cache = t.model.decode_step(t.params, t.slot_tok,
                                                       t.cache)
-                self._consume(t, logits)
+                self._consume(t, logits, now + dt)
                 dt += n_active * self._ops_time(t.cfg, 1)
         return dt
 
-    def _tenant_batched_step(self, t: Tenant) -> float:
+    def _tenant_batched_step(self, t: Tenant, now: float = 0.0) -> float:
         logits, t.cache = t.model.decode_step(t.params, t.slot_tok, t.cache)
-        self._consume(t, logits)
-        return self._ops_time(t.cfg, len(t.active_slots()))
+        dt = self._ops_time(t.cfg, len(t.active_slots()))
+        self._consume(t, logits, now + dt)
+        return dt
 
-    def _consume(self, t: Tenant, logits: jax.Array) -> None:
+    def _consume(self, t: Tenant, logits: jax.Array, now: float = 0.0
+                 ) -> None:
         toks = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
         t.slot_tok = toks[:, None]
         for slot in t.active_slots():
             req = t.slot_req[slot]
             req.tokens_out.append(int(toks[slot]))
+            self._emit_token(req, int(toks[slot]), now)
             t.slot_remaining[slot] -= 1
 
     def _retire(self, t: Tenant, now: float) -> List[ServeRequest]:
@@ -584,6 +751,7 @@ class ServingEngine:
         tok = jnp.argmax(prog.env["logits"][0]).astype(jnp.int32)
         req.tokens_out = [int(tok)]
         now += self._prefill_attn_time(t.cfg, prog.env["real_len"])
+        self._emit_token(req, int(tok), now)
         slot = prog.env["slot"]
         if slot is None:
             req.finish_t = now     # single token: done at prefill, no slot
@@ -660,9 +828,9 @@ class ServingEngine:
             req_deadlines=tuple((r.req_id, f)
                                 for (r, _), f in zip(reqs, finals)))
 
-    def _run_event_loop(self, pending: List[ServeRequest], rng: jax.Array
-                        ) -> float:
-        # each run is a fresh virtual-clock epoch: arrival history from a
+    def _open_loop(self, rng: jax.Array, *, oracle: bool = True,
+                   next_hint: Optional[Any] = None) -> _LoopState:
+        # each epoch is a fresh virtual-clock epoch: arrival history from a
         # previous trace describes a different workload (and would poison
         # observe(), whose last-arrival times now sit past every new t)
         self._arrival_pred.reset()
@@ -676,219 +844,237 @@ class ServingEngine:
         sessions = [self.jit.session(
             device=d, cost=None if d == 0 else self.devices.cost(d),
             trace=trace) for d in range(n_dev)]
-        cert = ScheduleCertifier() if trace is not None else None
-        certified = 0          # dispatch records already fed to the certifier
         stream_ids = {name: i for i, name in enumerate(self.tenants)}
-        id2name = {i: name for name, i in stream_ids.items()}
-        policy = self.placement
-        tenant_dev: Dict[str, int] = {
-            n: p.device for n, p in policy.assignments.items()}
+        return _LoopState(
+            rng=rng, sessions=sessions, trace=trace,
+            cert=ScheduleCertifier() if trace is not None else None,
+            stream_ids=stream_ids,
+            id2name={i: name for name, i in stream_ids.items()},
+            tenant_dev={n: p.device
+                        for n, p in self.placement.assignments.items()},
+            queues=[[] for _ in range(n_dev)], pis=[0] * n_dev,
+            waiting=[[] for _ in range(n_dev)], inflight={},
+            now=[0.0] * n_dev, busy=[0.0] * n_dev,
+            committed=[0.0] * n_dev, oracle=oracle, next_hint=next_hint)
 
-        def dev_of(name: str) -> int:
-            # placement binds ONCE, at the tenant's first admission; an
-            # expert-parallel MoE tenant spanning the mesh registers its
-            # span with its home session, which prices the all-to-all
-            # into every expert GEMM's slack and plan estimate
-            d = tenant_dev.get(name)
-            if d is None:
-                t = self.tenants[name]
-                pl = policy.place(name, t.cfg, batch=t.max_batch)
-                d = tenant_dev[name] = pl.device
-                if pl.expert_span > 1:
-                    sessions[d].set_stream_span(stream_ids[name],
-                                                pl.expert_span)
-            return d
+    def _dev_of(self, st: _LoopState, name: str) -> int:
+        # placement binds ONCE, at the tenant's first admission; an
+        # expert-parallel MoE tenant spanning the mesh registers its
+        # span with its home session, which prices the all-to-all
+        # into every expert GEMM's slack and plan estimate
+        d = st.tenant_dev.get(name)
+        if d is None:
+            t = self.tenants[name]
+            pl = self.placement.place(name, t.cfg, batch=t.max_batch)
+            d = st.tenant_dev[name] = pl.device
+            if pl.expert_span > 1:
+                st.sessions[d].set_stream_span(st.stream_ids[name],
+                                               pl.expert_span)
+        return d
 
-        # route the arrival-sorted trace onto per-device admission queues;
-        # dev_of fires in arrival order of each tenant's FIRST request —
-        # the same binding a lazy per-admission call would make, but the
-        # queues keep one slow device's backlog from head-of-line-blocking
-        # another device's due requests
-        queues: List[List[ServeRequest]] = [[] for _ in range(n_dev)]
-        for req in pending:
-            queues[dev_of(req.tenant)].append(req)
-        pis = [0] * n_dev
-        waiting: List[List[ServeRequest]] = [[] for _ in range(n_dev)]
-        inflight: Dict[str, KernelProgram] = {}
-        now = [0.0] * n_dev    # per-device virtual clocks
-        busy = [0.0] * n_dev   # analytic charges (dispatch time via stats)
-        n_done = 0
-        total = len(pending)
-        while True:
-            progressed = False
-            for d in range(n_dev):
-                session, q, wq = sessions[d], queues[d], waiting[d]
-                # 1. live admission on device d's timeline. Dense tenants
-                #    DECLARE the prompt pass as a prefill KernelProgram —
-                #    its GEMMs join the device's live op pool and coalesce
-                #    with decode (and other tenants' prefill) traffic; the
-                #    tenant's decode joins only after its completion event.
-                #    Non-dense tenants keep the analytic serialized charge.
-                #    A tenant with a program inflight (or full slots)
-                #    admits at its next step boundary, but other tenants'
-                #    due requests are admitted past it, not blocked.
-                while pis[d] < len(q) and q[pis[d]].arrival_t <= now[d]:
-                    if self.predict_arrivals:
-                        self._arrival_pred.observe(q[pis[d]].tenant,
-                                                   q[pis[d]].arrival_t)
-                    wq.append(q[pis[d]])
-                    pis[d] += 1
-                still: List[ServeRequest] = []
-                for req in wq:
-                    t = self.tenants[req.tenant]
-                    if req.tenant in inflight:
-                        still.append(req)
-                        continue
-                    if self._prefill_capable(t) \
-                            and req.prompt_len >= self.prefill_declare_min:
-                        prog = self._declare_prefill(
-                            t, req, rng, stream_ids[req.tenant], now[d])
-                        if prog is None:
-                            still.append(req)  # slots full; retry later
-                            continue
-                        inflight[req.tenant] = prog
-                        session.admit(prog)
-                        if trace is not None:
-                            trace.req_admits.append((req.req_id, now[d]))
-                            trace.req_devices[req.req_id] = d
-                        progressed = True
-                        continue
-                    dt = self._admit(t, req, rng, now[d])
-                    if dt == 0.0 and req.tokens_out is None:
-                        still.append(req)  # tenant slots full; retry later
-                        continue
-                    now[d] += dt
-                    busy[d] += dt
-                    if trace is not None:
-                        trace.req_admits.append((req.req_id, now[d]))
-                        trace.req_devices[req.req_id] = d
-                    if not math.isnan(req.finish_t):
-                        n_done += 1    # retired at admission (single token)
-                        if trace is not None:
-                            trace.req_retires.append((req.req_id, now[d]))
-                            trace.retire_devices[req.req_id] = d
-                    progressed = True
-                waiting[d] = still
-                session.set_next_arrival(
-                    self._arrival_pred.predict(now[d])
-                    if self.predict_arrivals
-                    else q[pis[d]].arrival_t if pis[d] < len(q)
-                    else math.inf)
+    def _route(self, st: _LoopState, req: ServeRequest) -> int:
+        """Append ``req`` to its home device's admission queue."""
+        d = self._dev_of(st, req.tenant)
+        st.queues[d].append(req)
+        st.total += 1
+        return d
 
-                # 2. every JIT-capable tenant homed here with live requests
-                #    keeps a program in this device's pool — admitted
-                #    between dispatches, not per round
-                for name, t in self.tenants.items():
-                    if tenant_dev.get(name) != d:
-                        continue
-                    if self._jit_capable(t) and name not in inflight \
-                            and t.active_slots():
-                        prog = self._build_program(t, stream_ids[name],
-                                                   now[d])
-                        if t.cfg.arch_type in ("moe", "ssm"):
-                            session.stats.nondense_programs += 1
-                        inflight[name] = prog
-                        session.admit(prog)
-                        progressed = True
+    def _door_decision(self, st: _LoopState, req: ServeRequest, d: int
+                       ) -> bool:
+        """Consult the admission controller for one due request (fires
+        exactly once, when the request first becomes due on its device's
+        clock). Returns False when the request was shed at the door — it
+        never occupies a slot and stays out of the schedule trace, like a
+        refused admission, but counts as an SLO miss in the report."""
+        t = self.tenants[req.tenant]
+        cost_s = self._request_cost_s(t, req)
+        backlog = max(0.0, st.committed[d] - st.now[d])
+        dec = self.admission.decide(req, st.now[d], backlog, cost_s,
+                                    self._arrival_pred.gap(req.tenant))
+        if dec.action == "shed":
+            req.shed = True
+            st.n_done += 1
+            return False
+        if dec.action == "degrade":
+            req.degraded_from = req.tier
+            req.tier = dec.tier
+            req.slo_s = dec.slo_s
+        # commit the modeled cost to the device's completion horizon —
+        # the backlog meter later decisions are judged against
+        st.committed[d] = max(st.committed[d], st.now[d]) + cost_s
+        return True
 
-                # 3. one scheduler decision on device d's virtual clock
-                ev = session.tick(now[d])
-                if cert is not None:
-                    # certify this tick's new dispatches at the tick they
-                    # happened — a HazardViolation raises right here, with
-                    # the offending group as the last trace record. The
-                    # trace is shared, so records from every device flow
-                    # through the same certifier (placement checks included)
-                    for dr in trace.dispatches[certified:]:
-                        cert.observe(dr)
-                    certified = len(trace.dispatches)
-                progressed |= ev.kind != "idle"
-                now[d] = max(now[d], ev.t)
-                for prog in ev.completed:
-                    t = self.tenants[id2name[prog.stream_id]]
-                    del inflight[id2name[prog.stream_id]]
-                    if prog.kind == "prefill":
-                        t0 = now[d]
-                        now[d], done = self._on_prefill_complete(
-                            t, prog, now[d])
-                        busy[d] += now[d] - t0
-                        n_done += done
-                        if done and trace is not None:
-                            trace.req_retires.append(
-                                (prog.env["req"].req_id, now[d]))
-                            trace.retire_devices[prog.env["req"].req_id] = d
-                        continue
-                    t.cache = prog.env["cache"]
-                    self._consume(t, prog.env["logits"][:, None, :])
-                    # KV streaming charged at the ACTIVE batch size: idle
-                    # slots have no cache rows to read, so charging
-                    # max_batch over-billed partially-filled tenants
-                    attn = self._attn_time(t.cfg,
-                                           max(len(t.active_slots()), 1))
-                    now[d] += attn
-                    busy[d] += attn
-                    retired = self._retire(t, now[d])
-                    n_done += len(retired)
-                    if trace is not None:
-                        trace.req_retires.extend(
-                            (r.req_id, now[d]) for r in retired)
-                        for r in retired:
-                            trace.retire_devices[r.req_id] = d
-
-                # 4. non-JIT tenants homed here interleave monolithic
-                #    batched steps on this device's clock
-                for name, t in self.tenants.items():
-                    if tenant_dev.get(name) != d:
-                        continue
-                    if not self._jit_capable(t) and t.active_slots():
-                        dt = self._tenant_batched_step(t)
-                        now[d] += dt
-                        busy[d] += dt
-                        retired = self._retire(t, now[d])
-                        n_done += len(retired)
-                        if trace is not None:
-                            trace.req_retires.extend(
-                                (r.req_id, now[d]) for r in retired)
-                            for r in retired:
-                                trace.retire_devices[r.req_id] = d
-                        progressed = True
-
-            if n_done >= total \
-                    and not any(s.live for s in sessions) \
-                    and all(pis[d] >= len(queues[d]) for d in range(n_dev)) \
-                    and not any(waiting):
-                break
-            if not progressed:
-                advanced = False
-                for d in range(n_dev):
-                    # idle device: its clock jumps to its next arrival
-                    if pis[d] < len(queues[d]) \
-                            and now[d] < queues[d][pis[d]].arrival_t:
-                        now[d] = queues[d][pis[d]].arrival_t
-                        advanced = True
-                if advanced:
+    def _device_pass(self, st: _LoopState, d: int) -> bool:
+        """One pass over device ``d``'s timeline: drain due arrivals
+        (through the admission controller when the front door is on),
+        admit waiting requests, keep JIT-capable tenants' programs in the
+        pool, take one scheduler decision, land completions, and step
+        non-JIT tenants. Returns True if anything progressed."""
+        progressed = False
+        session, q, wq = st.sessions[d], st.queues[d], st.waiting[d]
+        trace, cert, rng = st.trace, st.cert, st.rng
+        now, busy = st.now, st.busy
+        # 1. live admission on device d's timeline. Dense tenants
+        #    DECLARE the prompt pass as a prefill KernelProgram —
+        #    its GEMMs join the device's live op pool and coalesce
+        #    with decode (and other tenants' prefill) traffic; the
+        #    tenant's decode joins only after its completion event.
+        #    Non-dense tenants keep the analytic serialized charge.
+        #    A tenant with a program inflight (or full slots)
+        #    admits at its next step boundary, but other tenants'
+        #    due requests are admitted past it, not blocked.
+        while st.pis[d] < len(q) and q[st.pis[d]].arrival_t <= now[d]:
+            req = q[st.pis[d]]
+            st.pis[d] += 1
+            if self.predict_arrivals or self.admission is not None:
+                self._arrival_pred.observe(req.tenant, req.arrival_t)
+            if self.admission is not None \
+                    and not self._door_decision(st, req, d):
+                progressed = True   # shed at the door: resolved right here
+                continue
+            wq.append(req)
+        still: List[ServeRequest] = []
+        for req in wq:
+            t = self.tenants[req.tenant]
+            if req.tenant in st.inflight:
+                still.append(req)
+                continue
+            if self._prefill_capable(t) \
+                    and req.prompt_len >= self.prefill_declare_min:
+                prog = self._declare_prefill(
+                    t, req, rng, st.stream_ids[req.tenant], now[d])
+                if prog is None:
+                    still.append(req)  # slots full; retry later
                     continue
-                if not any(waiting):
-                    break
-                # stall guard: every queue is exhausted, every waiting
-                # request was refused admission, and there is nothing
-                # inflight or decoding anywhere whose completion could
-                # change that — another iteration would see the identical
-                # state, so the loop must terminate (the requests stay
-                # unfinished and surface in ServeReport.unfinished)
-                if not any(s.live for s in sessions) and not inflight \
-                        and not any(t.active_slots()
-                                    for t in self.tenants.values()):
-                    break
+                st.inflight[req.tenant] = prog
+                session.admit(prog)
+                if trace is not None:
+                    trace.req_admits.append((req.req_id, now[d]))
+                    trace.req_devices[req.req_id] = d
+                progressed = True
+                continue
+            dt = self._admit(t, req, rng, now[d])
+            if dt == 0.0 and req.tokens_out is None:
+                still.append(req)  # tenant slots full; retry later
+                continue
+            now[d] += dt
+            busy[d] += dt
+            if trace is not None:
+                trace.req_admits.append((req.req_id, now[d]))
+                trace.req_devices[req.req_id] = d
+            if not math.isnan(req.finish_t):
+                st.n_done += 1     # retired at admission (single token)
+                if trace is not None:
+                    trace.req_retires.append((req.req_id, now[d]))
+                    trace.retire_devices[req.req_id] = d
+            progressed = True
+        st.waiting[d] = still
+        if self.predict_arrivals:
+            hint = self._arrival_pred.predict(now[d])
+        else:
+            # replay: oracle lookahead into the routed trace; the daemon
+            # additionally consults the door's scheduled submissions
+            hint = q[st.pis[d]].arrival_t if st.pis[d] < len(q) \
+                else math.inf
+            if not st.oracle and st.next_hint is not None:
+                nxt = st.next_hint(now[d])
+                if nxt is not None:
+                    hint = min(hint, nxt)
+        session.set_next_arrival(hint)
+
+        # 2. every JIT-capable tenant homed here with live requests
+        #    keeps a program in this device's pool — admitted
+        #    between dispatches, not per round
+        for name, t in self.tenants.items():
+            if st.tenant_dev.get(name) != d:
+                continue
+            if self._jit_capable(t) and name not in st.inflight \
+                    and t.active_slots():
+                prog = self._build_program(t, st.stream_ids[name],
+                                           now[d])
+                if t.cfg.arch_type in ("moe", "ssm"):
+                    session.stats.nondense_programs += 1
+                st.inflight[name] = prog
+                session.admit(prog)
+                progressed = True
+
+        # 3. one scheduler decision on device d's virtual clock
+        ev = session.tick(now[d])
+        if cert is not None:
+            # certify this tick's new dispatches at the tick they
+            # happened — a HazardViolation raises right here, with
+            # the offending group as the last trace record. The
+            # trace is shared, so records from every device flow
+            # through the same certifier (placement checks included)
+            for dr in trace.dispatches[st.certified:]:
+                cert.observe(dr)
+            st.certified = len(trace.dispatches)
+        progressed |= ev.kind != "idle"
+        now[d] = max(now[d], ev.t)
+        for prog in ev.completed:
+            t = self.tenants[st.id2name[prog.stream_id]]
+            del st.inflight[st.id2name[prog.stream_id]]
+            if prog.kind == "prefill":
+                t0 = now[d]
+                now[d], done = self._on_prefill_complete(
+                    t, prog, now[d])
+                busy[d] += now[d] - t0
+                st.n_done += done
+                if done and trace is not None:
+                    trace.req_retires.append(
+                        (prog.env["req"].req_id, now[d]))
+                    trace.retire_devices[prog.env["req"].req_id] = d
+                continue
+            t.cache = prog.env["cache"]
+            # KV streaming charged at the ACTIVE batch size: idle
+            # slots have no cache rows to read, so charging
+            # max_batch over-billed partially-filled tenants
+            attn = self._attn_time(t.cfg,
+                                   max(len(t.active_slots()), 1))
+            self._consume(t, prog.env["logits"][:, None, :],
+                          now[d] + attn)
+            now[d] += attn
+            busy[d] += attn
+            retired = self._retire(t, now[d])
+            st.n_done += len(retired)
+            if trace is not None:
+                trace.req_retires.extend(
+                    (r.req_id, now[d]) for r in retired)
+                for r in retired:
+                    trace.retire_devices[r.req_id] = d
+
+        # 4. non-JIT tenants homed here interleave monolithic
+        #    batched steps on this device's clock
+        for name, t in self.tenants.items():
+            if st.tenant_dev.get(name) != d:
+                continue
+            if not self._jit_capable(t) and t.active_slots():
+                dt = self._tenant_batched_step(t, now[d])
+                now[d] += dt
+                busy[d] += dt
+                retired = self._retire(t, now[d])
+                st.n_done += len(retired)
+                if trace is not None:
+                    trace.req_retires.extend(
+                        (r.req_id, now[d]) for r in retired)
+                    for r in retired:
+                        trace.retire_devices[r.req_id] = d
+                progressed = True
+        return progressed
+
+    def _close_loop(self, st: _LoopState,
+                    requests: Sequence[ServeRequest]) -> None:
+        trace, cert, sessions = st.trace, st.cert, st.sessions
         if trace is not None:
             # close the request lifecycle, then balance it: SLO-demoted
             # requests from every device's scheduler, plus admitted
-            # requests that never finished (refused-admission requests
-            # were never admitted, so they stay out of the trace entirely)
+            # requests that never finished (refused-admission and
+            # door-shed requests were never admitted, so they stay out
+            # of the trace entirely)
             trace.evicted = set()
             for s in sessions:
                 trace.evicted |= set(s.sched.demoted_requests())
-            by_id = {r.req_id: r for r in pending}
+            by_id = {r.req_id: r for r in requests}
             admitted = {rid for rid, _ in trace.req_admits}
             trace.unfinished = {rid for rid in admitted
                                 if math.isnan(by_id[rid].finish_t)}
@@ -899,13 +1085,193 @@ class ServingEngine:
         self.last_trace = trace
         # per-device dispatch time lives in each session's stats; analytic
         # charges (prefill/attention/batched steps) were accumulated above
-        self._last_device_time = list(now)
+        self._last_device_time = list(st.now)
         self._last_device_busy = [
-            busy[d] + sessions[d].stats.modeled_time_s
-            for d in range(n_dev)]
+            st.busy[d] + sessions[d].stats.modeled_time_s
+            for d in range(len(sessions))]
         for s in sessions:
             self.jit_stats.merge(s.stats)
-        return max(now)
+
+    def _run_event_loop(self, pending: List[ServeRequest], rng: jax.Array
+                        ) -> float:
+        st = self._open_loop(rng)
+        # route the arrival-sorted trace onto per-device admission queues;
+        # _dev_of fires in arrival order of each tenant's FIRST request —
+        # the same binding a lazy per-admission call would make, but the
+        # queues keep one slow device's backlog from head-of-line-blocking
+        # another device's due requests
+        for req in pending:
+            self._route(st, req)
+        n_dev = len(self.devices)
+        while True:
+            progressed = False
+            for d in range(n_dev):
+                progressed |= self._device_pass(st, d)
+            if st.n_done >= st.total \
+                    and not any(s.live for s in st.sessions) \
+                    and all(st.pis[d] >= len(st.queues[d])
+                            for d in range(n_dev)) \
+                    and not any(st.waiting):
+                break
+            if not progressed:
+                advanced = False
+                for d in range(n_dev):
+                    # idle device: its clock jumps to its next arrival
+                    if st.pis[d] < len(st.queues[d]) \
+                            and st.now[d] < st.queues[d][st.pis[d]].arrival_t:
+                        st.now[d] = st.queues[d][st.pis[d]].arrival_t
+                        advanced = True
+                if advanced:
+                    continue
+                if not any(st.waiting):
+                    break
+                # stall guard: every queue is exhausted, every waiting
+                # request was refused admission, and there is nothing
+                # inflight or decoding anywhere whose completion could
+                # change that — another iteration would see the identical
+                # state, so the loop must terminate (the requests stay
+                # unfinished and surface in ServeReport.unfinished)
+                if not any(s.live for s in st.sessions) \
+                        and not st.inflight \
+                        and not any(t.active_slots()
+                                    for t in self.tenants.values()):
+                    break
+        self._close_loop(st, pending)
+        return max(st.now)
+
+    # ------------------------------------------------------------------
+    # the front door (daemon mode)
+    # ------------------------------------------------------------------
+    def _live_stats(self, st: _LoopState, served: List[ServeRequest],
+                    t: float) -> Dict[str, Any]:
+        return {
+            "t": t,
+            "submitted": len(served),
+            "finished": sum(1 for r in served
+                            if not math.isnan(r.finish_t)),
+            "shed": sum(1 for r in served if r.shed),
+            "inflight": len(st.inflight),
+            "waiting": sum(len(w) for w in st.waiting),
+            "device_time_s": list(st.now),
+        }
+
+    def serve_forever(self, door: FrontDoor, *,
+                      clock: Optional[Any] = None,
+                      rng: Optional[jax.Array] = None,
+                      idle_poll_s: float = 0.005,
+                      on_stats: Optional[Any] = None,
+                      stats_interval_s: float = 1.0) -> ServeReport:
+        """Serve continuously from ``door`` until it closes (daemon mode).
+
+        The same per-device event-loop machinery as ``run``, driven by a
+        clock instead of a finite trace: requests stream in through the
+        thread-safe ``FrontDoor`` (arrival-stamped on the clock), the
+        admission controller (when configured) admits / degrades / sheds
+        each one as it becomes due, tokens stream out per request the
+        moment they retire (``FrontDoor.deliver`` -> per-request
+        ``Ticket``), and the engine IDLES while the door is open and
+        empty — the replay stall guard becomes an idle-wait. Closing the
+        door flushes all in-flight work, then the loop terminates and
+        returns the epoch's ``ServeReport`` (shed requests included, as
+        SLO misses).
+
+        ``clock`` is a ``MonotonicClock`` by default — the real wall
+        clock; per-device modeled timelines are floored at real elapsed
+        time every iteration so arrivals, deadlines and modeled charges
+        share one axis. Pass a follower ``VirtualClock`` for
+        deterministic tests/benches: it only tracks the modeled
+        timelines, so a door pre-loaded with scheduled submissions
+        replays with exactly the per-device clock semantics of ``run``.
+        ``on_stats`` (optional) is called at most every
+        ``stats_interval_s`` clock seconds with a live-stats dict — the
+        daemon's heartbeat."""
+        assert self.mode == "vliw", \
+            "daemon serving is a vliw-engine feature (baseline modes " \
+            "define closed-trace round semantics)"
+        rng = rng if rng is not None else jax.random.PRNGKey(0)
+        clock = clock if clock is not None else MonotonicClock()
+        wall0 = _time.perf_counter()
+        st = self._open_loop(rng, oracle=False,
+                             next_hint=door.next_arrival)
+        served: List[ServeRequest] = []
+        seen_ids: Dict[int, int] = {}
+        n_dev = len(self.devices)
+        prev_sink = self.token_sink
+        if prev_sink is None:
+            self.token_sink = door.deliver
+        last_stats = clock.now()
+        try:
+            while True:
+                now_r = clock.now()
+                if clock.authoritative:
+                    # real clock: a device cannot serve in the past — its
+                    # modeled timeline is floored at real elapsed time
+                    for d in range(n_dev):
+                        st.now[d] = max(st.now[d], now_r)
+                for req in door.poll(now_r):
+                    if req.req_id in seen_ids:
+                        raise ValueError(
+                            f"duplicate req_id {req.req_id} through the "
+                            f"door — request ids key prompt synthesis "
+                            f"and retirement accounting")
+                    seen_ids[req.req_id] = 1
+                    served.append(req)
+                    self._route(st, req)
+                progressed = False
+                for d in range(n_dev):
+                    progressed |= self._device_pass(st, d)
+                # a follower clock tracks the modeled timelines; the real
+                # clock ignores this (time advances itself)
+                clock.advance_to(max(st.now))
+                if on_stats is not None \
+                        and clock.now() - last_stats >= stats_interval_s:
+                    last_stats = clock.now()
+                    on_stats(self._live_stats(st, served, last_stats))
+                if progressed:
+                    continue
+                # idle devices jump to their next released-but-not-yet-due
+                # arrival (the replay idle-jump, on routed requests)
+                advanced = False
+                for d in range(n_dev):
+                    if st.pis[d] < len(st.queues[d]) \
+                            and st.now[d] < st.queues[d][st.pis[d]].arrival_t:
+                        st.now[d] = st.queues[d][st.pis[d]].arrival_t
+                        advanced = True
+                if advanced:
+                    continue
+                # nothing live anywhere. With the door closed and drained
+                # the flush is complete — terminate (waiting requests that
+                # can never admit surface in ServeReport.unfinished, the
+                # replay stall guard's behavior). With the door OPEN,
+                # idle-wait instead of terminating: a new submission or
+                # the closing of the door are the only remaining sources
+                # of progress.
+                if not any(s.live for s in st.sessions) \
+                        and not st.inflight \
+                        and not any(t.active_slots()
+                                    for t in self.tenants.values()):
+                    if door.finished(now_r) \
+                            and all(st.pis[d] >= len(st.queues[d])
+                                    for d in range(n_dev)):
+                        break
+                    targets = []
+                    nxt = door.next_arrival(now_r)
+                    if nxt is not None:
+                        targets.append(max(nxt, now_r))
+                    if door.close_at is not None \
+                            and door.close_at > now_r:
+                        targets.append(door.close_at)
+                    clock.sleep_until(min(targets) if targets
+                                      else now_r + idle_poll_s)
+        finally:
+            self.token_sink = prev_sink
+        self._close_loop(st, served)
+        makespan = max(st.now) if st.now else 0.0
+        wall = _time.perf_counter() - wall0
+        return ServeReport("vliw", served, makespan, wall,
+                           jit=self.jit_stats,
+                           device_time_s=self._last_device_time,
+                           device_busy_s=self._last_device_busy)
 
     # ------------------------------------------------------------------
     # round loop (baseline modes: rounds ARE their semantics)
@@ -926,7 +1292,7 @@ class ServingEngine:
                     n_done += 1        # retired at admission (single token)
                 pi += 1
                 progressed = True
-            dt = self._decode_round()
+            dt = self._decode_round(now)
             if dt == 0.0 and not progressed:
                 if pi < len(pending):
                     now = max(now, pending[pi].arrival_t)
@@ -955,7 +1321,15 @@ class ServingEngine:
                 f"duplicate req_id(s) in trace: {dupes} — request ids must "
                 f"be unique per run (they key prompt synthesis, eviction "
                 f"dedup and retirement accounting)")
-        pending = sorted(trace, key=lambda r: r.arrival_t)
+        # run() serves private COPIES of the requests: results (tokens_out,
+        # finish_t, shed, tier degradation) land on the copies in the
+        # returned report, and the caller's trace objects are NEVER
+        # mutated — a trace can be replayed across engines and modes
+        # without the defensive deepcopy every call site used to need
+        requests = [dataclasses.replace(
+            r, finish_t=float("nan"), tokens_out=None, shed=False,
+            degraded_from=None) for r in trace]
+        pending = sorted(requests, key=lambda r: r.arrival_t)
         wall0 = _time.perf_counter()
         if self.mode == "vliw":
             makespan = self._run_event_loop(pending, rng)
@@ -964,6 +1338,6 @@ class ServingEngine:
             makespan = self._run_rounds(pending, rng)
             dev_t = dev_b = None
         wall = _time.perf_counter() - wall0
-        return ServeReport(self.mode, list(trace), makespan, wall,
+        return ServeReport(self.mode, requests, makespan, wall,
                            jit=self.jit_stats if self.mode == "vliw" else None,
                            device_time_s=dev_t, device_busy_s=dev_b)

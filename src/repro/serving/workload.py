@@ -17,9 +17,16 @@ class ServeRequest:
     prompt_len: int
     max_new_tokens: int
     slo_s: float
+    # SLO tier (index into the engine's TierSpec ladder, 0 = most urgent).
+    # The front door's admission controller may DEGRADE a request to a
+    # lower tier (relaxing slo_s, recording the original in
+    # ``degraded_from``) or SHED it outright instead of admitting it.
+    tier: int = 0
     # filled by the engine:
     finish_t: float = float("nan")
     tokens_out: Optional[List[int]] = None
+    shed: bool = False
+    degraded_from: Optional[int] = None
 
     @property
     def latency(self) -> float:
@@ -27,6 +34,8 @@ class ServeRequest:
 
     @property
     def met_slo(self) -> bool:
+        # NaN finish_t (unfinished or shed) compares False: a request that
+        # never finished did not meet its SLO
         return self.latency <= self.slo_s
 
 
@@ -47,6 +56,59 @@ def bursty_arrivals(rate_hz: float, n: int, rng: np.random.Generator,
         t += rng.exponential(1.0 / r)
         out.append(t)
     return out
+
+
+def diurnal_arrivals(base_hz: float, peak_hz: float, period_s: float,
+                     n: int, rng: np.random.Generator,
+                     start_t: float = 0.0) -> List[float]:
+    """Nonhomogeneous Poisson arrivals via thinning: the rate swings
+    sinusoidally between ``base_hz`` (trough) and ``peak_hz`` (peak) with
+    period ``period_s`` — the diurnal load curve the serving front door is
+    gated on (time-average rate = (base + peak) / 2)."""
+    out: List[float] = []
+    t = start_t
+    lam_max = max(base_hz, peak_hz)
+    while len(out) < n:
+        t += rng.exponential(1.0 / lam_max)
+        lam = base_hz + (peak_hz - base_hz) * 0.5 * (
+            1.0 - np.cos(2.0 * np.pi * (t - start_t) / period_s))
+        if rng.random() * lam_max < lam:
+            out.append(t)
+    return out
+
+
+def open_loop_trace(tenants: Sequence[str], rate_hz: float, n: int, *,
+                    shape: str = "poisson",
+                    tier_slo_s: Sequence[float] = (0.002, 0.004, 0.012),
+                    tier_weights: Sequence[float] = (0.5, 0.3, 0.2),
+                    prompt_len: int = 8, max_new_tokens: int = 4,
+                    burst_factor: float = 5.0, period_s: Optional[float] = None,
+                    seed: int = 0, rid0: int = 0) -> List[ServeRequest]:
+    """Open-loop tiered trace for the serving front door: ONE merged
+    arrival stream at ``rate_hz`` (arrivals keep coming regardless of
+    completions — the sustained-load regime), split round-robin over
+    ``tenants``; each request draws an SLO tier from ``tier_weights``
+    (tier i carries deadline ``tier_slo_s[i]``). ``shape`` selects the
+    arrival process: "poisson", "bursty" (MMPP) or "diurnal" (sinusoidal
+    rate between 0.25x and 1.75x of ``rate_hz``, period ``period_s`` or
+    the trace's natural span)."""
+    rng = np.random.default_rng(seed)
+    if shape == "poisson":
+        arr = poisson_arrivals(rate_hz, n, rng)
+    elif shape == "bursty":
+        arr = bursty_arrivals(rate_hz, n, rng, burst_factor=burst_factor)
+    elif shape == "diurnal":
+        period = period_s if period_s is not None else n / rate_hz
+        arr = diurnal_arrivals(0.25 * rate_hz, 1.75 * rate_hz, period, n,
+                               rng)
+    else:
+        raise ValueError(f"unknown arrival shape {shape!r}")
+    w = np.asarray(tier_weights, dtype=float)
+    tiers = rng.choice(len(w), size=n, p=w / w.sum())
+    return [ServeRequest(rid0 + i, tenants[i % len(tenants)], float(t),
+                         prompt_len, max_new_tokens,
+                         slo_s=float(tier_slo_s[tier]), tier=int(tier))
+            for i, (t, tier) in enumerate(zip(arr, tiers))]
 
 
 def two_wave_trace(wave1: Sequence[str], wave2: Sequence[str],

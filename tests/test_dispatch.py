@@ -2,7 +2,6 @@
 bit-identity + hot-swap invalidation, envelope-bucket math, retrace-free
 steady-state ticks, aspect-from-bm classification, and the arrival-
 prediction EWMA."""
-import copy
 import math
 
 import jax
@@ -393,7 +392,7 @@ def test_engine_cached_dispatch_token_identity(dense_pair):
     for name, enabled in (("eager", False), ("jitted", True)):
         eng = ServingEngine(_two_tenants(dense_pair), mode="vliw")
         eng.jit.executor.enabled = enabled
-        reps[name] = eng.run(copy.deepcopy(trace))
+        reps[name] = eng.run(trace)
     assert _tokens(reps["eager"]) == _tokens(reps["jitted"])
     d = reps["jitted"].jit.dispatch
     assert d.dispatches == reps["jitted"].jit.superkernels
@@ -412,7 +411,7 @@ def test_engine_predict_arrivals_flag(dense_pair):
     for name, kw in (("replay", {}), ("ewma", dict(predict_arrivals=True))):
         eng = ServingEngine(_two_tenants(dense_pair), mode="vliw", **kw)
         assert eng.predict_arrivals == bool(kw)   # defaults to trace-driven
-        reps[name] = eng.run(copy.deepcopy(trace))
+        reps[name] = eng.run(trace)
     assert _tokens(reps["replay"]) == _tokens(reps["ewma"])
 
 
@@ -466,8 +465,8 @@ def test_engine_run_resets_predictor(dense_pair):
                            max_new_tokens=2, slo_s=1.0)
     eng = ServingEngine(_two_tenants(dense_pair), mode="vliw",
                         predict_arrivals=True)
-    eng.run(copy.deepcopy(trace))
-    eng.run(copy.deepcopy(trace))         # second epoch on the same engine
+    eng.run(trace)
+    eng.run(trace)                        # second epoch on the same engine
     # the predictor reflects the SECOND run's trace, not a poisoned merge
     assert all(t <= 1e-5 for t in eng._arrival_pred._last.values())
 

@@ -1,6 +1,5 @@
 """The event-driven OoO runtime: mid-flight admission, the stagger/WAIT
 branch on the real serving path, SLO eviction, and the livelock clamp."""
-import copy
 import math
 
 import jax
@@ -183,7 +182,7 @@ def test_midflight_admission_bit_identical_to_batched(dense_models):
     reps = {}
     for mode in ("batched", "vliw"):
         eng = ServingEngine(tenants(), mode=mode)
-        reps[mode] = eng.run(copy.deepcopy(trace))
+        reps[mode] = eng.run(trace)
     assert _tokens(reps["batched"]) == _tokens(reps["vliw"])
     # wave 2 joined a non-empty op pool, between dispatches
     assert reps["vliw"].jit.mid_flight_admissions > 0
@@ -207,7 +206,7 @@ def test_same_tenant_midflight_arrival_bit_identical(dense_models):
     reps = {}
     for mode in ("batched", "vliw"):
         eng = ServingEngine(tenants(), mode=mode)
-        reps[mode] = eng.run(copy.deepcopy(trace))
+        reps[mode] = eng.run(trace)
     assert _tokens(reps["batched"]) == _tokens(reps["vliw"])
     assert all(len(r.tokens_out) == 4 for r in reps["vliw"].requests)
 
@@ -233,7 +232,7 @@ def test_deferred_tenant_does_not_block_other_admissions(dense_models):
     reps = {}
     for mode in ("batched", "vliw"):
         eng = ServingEngine(tenants(), mode=mode)
-        reps[mode] = eng.run(copy.deepcopy(trace))
+        reps[mode] = eng.run(trace)
     assert _tokens(reps["batched"]) == _tokens(reps["vliw"])
     assert all(len(r.tokens_out) == 4 for r in reps["vliw"].requests)
     # "b" joined the live pool while "a" was mid-stream
@@ -259,7 +258,7 @@ def test_staged_arrivals_trigger_wait_and_improve_packing(dense_models):
     reps = {}
     for name, sc in (("wait", wait_cfg), ("nowait", nowait_cfg)):
         eng = ServingEngine(tenants(), mode="vliw", sched_cfg=sc)
-        reps[name] = eng.run(copy.deepcopy(trace))
+        reps[name] = eng.run(trace)
     w, n = reps["wait"].jit, reps["nowait"].jit
     assert w.waits >= 1
     assert n.waits == 0
@@ -280,7 +279,7 @@ def test_missed_slo_requests_counted_as_evictions(dense_models):
     trace = two_wave_trace(["t1"], ["t2"], 1e-7, prompt_len=8,
                            max_new_tokens=3, slo_s=1e-9)  # hopeless SLO
     eng = ServingEngine(tenants, mode="vliw")
-    rep = eng.run(copy.deepcopy(trace))
+    rep = eng.run(trace)
     # one demotion per missed request (per stream×deadline), not per GEMM op
     assert rep.jit.evictions == 2
     assert all(len(r.tokens_out) == 3 for r in rep.requests)

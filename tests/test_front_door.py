@@ -1,0 +1,339 @@
+"""The real-clock SLO front door (ISSUE 10): the serving daemon
+(``serve_forever``), tiered admission control at the door, token streaming
+tickets, and the serving-metrics bugfix sweep (out-of-order arrival
+observations, shed-counts-as-miss attainment, run() no longer mutating its
+trace)."""
+import math
+import threading
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import smoke_config
+from repro.models import Model
+from repro.serving import (AdmissionController, ArrivalPredictor, DoorClosed,
+                           FrontDoor, MonotonicClock, ServeReport,
+                           ServeRequest, ServingEngine, Tenant, TierSpec,
+                           VirtualClock, open_loop_trace)
+
+
+@pytest.fixture(scope="module")
+def dense_models():
+    out = {}
+    for arch, seed in (("gemma3-1b", 1), ("yi-9b", 2)):
+        cfg = smoke_config(arch)
+        m = Model(cfg, param_dtype=jnp.float32)
+        out[arch] = (m, m.init(jax.random.PRNGKey(seed)))
+    return out
+
+
+def _tenants(dense_models, max_batch=2, cache_len=32):
+    m1, p1 = dense_models["gemma3-1b"]
+    m2, p2 = dense_models["yi-9b"]
+    return [Tenant("a", m1, p1, cache_len=cache_len, max_batch=max_batch),
+            Tenant("b", m2, p2, cache_len=cache_len, max_batch=max_batch)]
+
+
+def _tokens(rep):
+    return {r.req_id: tuple(r.tokens_out or ()) for r in rep.requests}
+
+
+def _trace(n=4, rate=1e5, max_new=2, slo=1.0):
+    return [ServeRequest(i, "ab"[i % 2], i / rate, 8, max_new, slo)
+            for i in range(n)]
+
+
+# ---------------------------------------------------------------------------
+# satellite 1: ArrivalPredictor out-of-order observations
+# ---------------------------------------------------------------------------
+
+def test_arrival_predictor_folds_out_of_order_observations():
+    """Regression: ``observe`` used to silently drop any t < last, so a
+    reordered pair (routine with per-device queues + a real clock) lost
+    its gap and the EWMA went stale."""
+    pred = ArrivalPredictor(alpha=0.5)
+    pred.observe("t", 0.0)
+    pred.observe("t", 0.2)
+    assert pred.gap("t") == pytest.approx(0.2)
+    # out-of-order arrival BETWEEN the two seen so far: |0.1 - 0.2| = 0.1
+    # is the same inter-arrival sample seen from the other side — it must
+    # fold into the EWMA (pre-fix it was dropped and gap stayed 0.2)
+    pred.observe("t", 0.1)
+    assert pred.gap("t") == pytest.approx(0.5 * 0.1 + 0.5 * 0.2)
+    assert pred._last["t"] == pytest.approx(0.2)   # max, not the stale t
+    # in-order traffic afterwards keeps folding normally
+    pred.observe("t", 0.4)
+    assert pred.gap("t") == pytest.approx(0.5 * 0.2 + 0.5 * 0.15)
+    assert pred.predict(0.4) < math.inf
+
+
+def test_arrival_predictor_out_of_order_does_not_regress_last():
+    pred = ArrivalPredictor(alpha=0.2)
+    pred.observe("t", 1.0)
+    pred.observe("t", 0.5)          # late observation, first gap sample
+    assert pred.gap("t") == pytest.approx(0.5)
+    # predict anchors on the LATEST seen arrival, never the stale one
+    assert pred.predict(0.0) == pytest.approx(1.5)
+
+
+# ---------------------------------------------------------------------------
+# satellite 2: shed / unfinished requests count as SLO misses
+# ---------------------------------------------------------------------------
+
+def test_report_counts_shed_as_misses():
+    """Regression: attainment used to divide met-SLO by FINISHED requests
+    only, so anything the door shed (or dropped) silently inflated it."""
+    ok = ServeRequest(0, "a", 0.0, 4, 2, slo_s=1.0)
+    ok.finish_t, ok.tokens_out = 0.5, [1, 2]
+    shed = ServeRequest(1, "a", 0.0, 4, 2, slo_s=1.0, tier=0)
+    shed.shed = True
+    late = ServeRequest(2, "a", 0.0, 4, 2, slo_s=1.0, tier=1)
+    late.finish_t, late.tokens_out = 5.0, [3, 4]
+    rep = ServeReport("vliw", [ok, shed, late], modeled_time_s=1.0,
+                      wall_time_s=0.0)
+    assert rep.shed == 1 and rep.unfinished == 1
+    assert rep.slo_attainment == pytest.approx(1.0 / 3.0)   # not 1/2
+    assert rep.goodput_rps == pytest.approx(1.0)
+    assert rep.p_latency(1.0) == math.inf
+    by_tier = rep.tier_attainment()
+    assert by_tier[0] == pytest.approx(1.0 / 2.0)
+    assert by_tier[1] == 0.0
+
+
+def test_tier_attainment_groups_degraded_by_original_tier():
+    r = ServeRequest(0, "a", 0.0, 4, 2, slo_s=2.0, tier=1)
+    r.degraded_from = 0            # arrived tier 0, served at tier 1
+    r.finish_t, r.tokens_out = 1.0, [7]
+    rep = ServeReport("vliw", [r], modeled_time_s=1.0, wall_time_s=0.0)
+    assert rep.tier_attainment(original=True) == {0: 1.0}
+    assert rep.tier_attainment(original=False) == {1: 1.0}
+
+
+# ---------------------------------------------------------------------------
+# satellite 3: run() no longer mutates its trace argument
+# ---------------------------------------------------------------------------
+
+def test_run_does_not_mutate_trace_and_reruns_bit_identical(dense_models):
+    trace = _trace(n=4)
+    eng = ServingEngine(_tenants(dense_models), mode="vliw")
+    rep1 = eng.run(trace)
+    # the caller's request objects are untouched — no deepcopy needed
+    assert all(math.isnan(r.finish_t) and r.tokens_out is None
+               and not r.shed for r in trace)
+    rep2 = eng.run(trace)          # same objects, straight back in
+    assert _tokens(rep1) == _tokens(rep2)
+    assert all(len(t) == 2 for t in _tokens(rep1).values())
+    # and the report's requests are NOT the caller's objects
+    assert {id(r) for r in rep1.requests}.isdisjoint(id(r) for r in trace)
+
+
+# ---------------------------------------------------------------------------
+# the admission controller (unit)
+# ---------------------------------------------------------------------------
+
+def test_admission_controller_tier_ladder():
+    ctl = AdmissionController()
+    req = ServeRequest(0, "a", 0.0, 8, 4, slo_s=1.0, tier=0)
+    # idle device, cheap request: admit at its own tier
+    d = ctl.decide(req, now=0.0, backlog_s=0.0, cost_s=0.1, gap_s=math.inf)
+    assert d.action == "admit" and d.tier == 0
+    # backlog pushes completion past tier 0's deadline but inside tier 1's
+    d = ctl.decide(req, now=0.0, backlog_s=1.5, cost_s=0.1, gap_s=math.inf)
+    assert d.action == "degrade" and d.tier == 1
+    assert d.slo_s == pytest.approx(2.0)
+    # hopeless backlog: shed
+    d = ctl.decide(req, now=0.0, backlog_s=50.0, cost_s=0.1, gap_s=math.inf)
+    assert d.action == "shed"
+    assert ctl.n_shed == 1 and ctl.n_degraded == 1
+    # overload margin: rho = cost/gap > 1 tightens the bar
+    tight = ctl.decide(req, now=0.0, backlog_s=0.85, cost_s=0.1,
+                       gap_s=0.01)
+    assert tight.eta_s > 0.95      # margin added on top of backlog + cost
+
+
+def test_admission_controller_unsheddable_tier_admits_best_effort():
+    ctl = AdmissionController(tiers=(TierSpec("gold", 1.0, sheddable=False),),
+                              allow_degrade=False)
+    req = ServeRequest(0, "a", 0.0, 8, 4, slo_s=0.1, tier=0)
+    d = ctl.decide(req, now=0.0, backlog_s=99.0, cost_s=0.1, gap_s=math.inf)
+    assert d.action == "admit"     # the miss shows up in attainment instead
+
+
+# ---------------------------------------------------------------------------
+# the FrontDoor object
+# ---------------------------------------------------------------------------
+
+def test_front_door_lifecycle_and_guards():
+    door = FrontDoor()
+    t1 = door.submit(ServeRequest(0, "a", 0.0, 8, 2, 1.0), at=0.5)
+    door.submit(ServeRequest(1, "a", 0.0, 8, 2, 1.0))       # live: due now
+    with pytest.raises(ValueError, match="duplicate req_id"):
+        door.submit(ServeRequest(0, "a", 0.0, 8, 2, 1.0))
+    assert not door.finished(0.0)
+    out = door.poll(0.0)
+    assert [r.req_id for r in out] == [1]
+    assert out[0].arrival_t == 0.0          # live submission stamped at poll
+    assert door.next_arrival(0.0) == 0.5
+    assert door.poll(0.5) == [t1.request]
+    assert t1.request.arrival_t == 0.5      # scheduled keeps its stamp
+    door.close()
+    with pytest.raises(DoorClosed):
+        door.submit(ServeRequest(2, "a", 0.0, 8, 2, 1.0))
+    assert door.finished(0.5)
+
+
+def test_front_door_deferred_close():
+    door = FrontDoor()
+    door.close(at=1.0)
+    assert not door.closed(0.5)
+    door.submit(ServeRequest(0, "a", 0.0, 8, 2, 1.0), at=2.0)  # pre-close ok
+    assert door.closed(1.0)
+    with pytest.raises(DoorClosed):
+        door.submit(ServeRequest(1, "a", 0.0, 8, 2, 1.0))
+    # accepted-but-scheduled submissions still release after closing
+    assert door.poll(2.0) != []
+    assert door.finished(2.0)
+
+
+# ---------------------------------------------------------------------------
+# tentpole: the daemon loop — idle-wait, flush-on-close, streaming
+# ---------------------------------------------------------------------------
+
+def test_daemon_idles_across_gap_and_flushes_on_close(dense_models):
+    """The replay stall guard terminates when pending is exhausted; the
+    daemon must IDLE through a dead window instead, then serve the late
+    arrival and flush cleanly once the door closes — with conservation
+    certified over the whole epoch."""
+    eng = ServingEngine(_tenants(dense_models), mode="vliw", certify=True)
+    door = FrontDoor()
+    door.submit(ServeRequest(0, "a", 0.0, 8, 2, 1.0), at=0.0)
+    # a gap many times the modeled service time: everything submitted so
+    # far completes, queues drain, nothing is live — the replay loop
+    # would stop right here
+    door.submit(ServeRequest(1, "b", 0.0, 8, 2, 1.0), at=0.5)
+    door.close(at=0.6)
+    rep = eng.serve_forever(door, clock=VirtualClock())
+    assert len(rep.requests) == 2
+    assert rep.unfinished == 0 and rep.shed == 0
+    assert all(len(r.tokens_out) == 2 for r in rep.requests)
+    # the late request was served AFTER the gap, on the virtual clock
+    assert rep.requests[1].finish_t > 0.5
+    assert rep.modeled_time_s > 0.5
+    # conservation over the full daemon epoch (admit/retire balance)
+    assert rep.jit.hazard_checks > 0
+    assert rep.jit.hazard_violations == 0
+
+
+def test_daemon_immediate_close_returns_empty_report(dense_models):
+    eng = ServingEngine(_tenants(dense_models), mode="vliw")
+    door = FrontDoor()
+    door.close()
+    rep = eng.serve_forever(door, clock=VirtualClock())
+    assert rep.requests == [] and rep.unfinished == 0
+
+
+def test_daemon_streams_tokens_through_tickets(dense_models):
+    eng = ServingEngine(_tenants(dense_models), mode="vliw")
+    door = FrontDoor()
+    seen = []
+    tk = door.submit(ServeRequest(0, "a", 0.0, 8, 3, 1.0), at=0.0,
+                     on_token=lambda tok, t: seen.append((tok, t)))
+    door.close(at=0.01)
+    rep = eng.serve_forever(door, clock=VirtualClock())
+    (req,) = rep.requests
+    assert tk.done and not tk.shed
+    # the ticket streamed exactly the tokens the report shows, in order,
+    # at nondecreasing virtual times
+    assert tk.tokens == req.tokens_out and len(tk.tokens) == 3
+    assert [tok for tok, _ in seen] == req.tokens_out
+    assert all(t1 <= t2 for (_, t1), (_, t2) in zip(seen, seen[1:]))
+
+
+def test_daemon_matches_replay_bit_identically(dense_models):
+    """A pre-scheduled door driven by the follower VirtualClock must
+    reduce exactly to ``run`` on the same trace: same tokens, same finish
+    times — the daemon is the same machinery on a different clock."""
+    trace = _trace(n=6, rate=1e4, max_new=2)
+    eng1 = ServingEngine(_tenants(dense_models), mode="vliw")
+    rep_replay = eng1.run(trace)
+
+    eng2 = ServingEngine(_tenants(dense_models), mode="vliw")
+    door = FrontDoor()
+    for r in trace:
+        door.submit(ServeRequest(r.req_id, r.tenant, r.arrival_t,
+                                 r.prompt_len, r.max_new_tokens, r.slo_s),
+                    at=r.arrival_t)
+    door.close(at=max(r.arrival_t for r in trace))
+    rep_daemon = eng2.serve_forever(door, clock=VirtualClock())
+
+    assert _tokens(rep_daemon) == _tokens(rep_replay)
+    fin_replay = {r.req_id: r.finish_t for r in rep_replay.requests}
+    for r in rep_daemon.requests:
+        assert r.finish_t == pytest.approx(fin_replay[r.req_id])
+
+
+def test_daemon_real_clock_live_submissions(dense_models):
+    """MonotonicClock smoke: a feeder thread pushes live (unscheduled)
+    submissions while the daemon runs on the real clock, then closes the
+    door; everything flushes."""
+    eng = ServingEngine(_tenants(dense_models), mode="vliw")
+    door = FrontDoor()
+
+    def feeder():
+        for i in range(3):
+            door.submit(ServeRequest(i, "ab"[i % 2], 0.0, 8, 2, 10.0))
+        door.close()
+
+    th = threading.Thread(target=feeder)
+    th.start()
+    rep = eng.serve_forever(door, clock=MonotonicClock())
+    th.join()
+    assert len(rep.requests) == 3 and rep.unfinished == 0
+    # arrivals were stamped on the real clock at release
+    assert all(r.arrival_t >= 0.0 for r in rep.requests)
+    assert all(r.finish_t >= r.arrival_t for r in rep.requests)
+
+
+# ---------------------------------------------------------------------------
+# tentpole: admission control under overload
+# ---------------------------------------------------------------------------
+
+def test_admission_sheds_under_overload_and_keeps_admitted_deadlines(
+        dense_models):
+    """Open-loop overload (offered load far past capacity): the admitting
+    engine sheds at the door, the admitted set keeps hitting its
+    deadlines, and attainment/goodput dominate the admit-everything
+    ablation — with bit-identical tokens on the jointly-finished set."""
+    eng_ctl = ServingEngine(_tenants(dense_models), mode="vliw",
+                            admission_control=True)
+    cost = eng_ctl._request_cost_s(
+        eng_ctl.tenants["a"], ServeRequest(0, "a", 0.0, 8, 2, 1.0))
+    # ~8x the modeled per-request service rate, tiered SLOs scaled to the
+    # cost model so the knee is real but tier deadlines are meetable
+    trace = open_loop_trace(
+        ["a", "b"], rate_hz=8.0 / cost, n=36, shape="poisson",
+        tier_slo_s=(4 * cost, 8 * cost, 12 * cost), prompt_len=8,
+        max_new_tokens=2, seed=7)
+    rep_ctl = eng_ctl.run(trace)
+
+    eng_all = ServingEngine(_tenants(dense_models), mode="vliw")
+    rep_all = eng_all.run(trace)
+
+    assert rep_ctl.shed > 0
+    assert eng_ctl.admission.n_shed == rep_ctl.shed
+    # shed requests count as misses, never as successes
+    assert all(not r.met_slo for r in rep_ctl.requests if r.shed)
+    assert rep_ctl.slo_attainment > rep_all.slo_attainment
+    assert rep_ctl.goodput_rps > rep_all.goodput_rps
+    # the ADMITTED requests kept their (possibly degraded) promises far
+    # better than the drowning admit-everything queue
+    admitted = [r for r in rep_ctl.requests if not r.shed]
+    att_admitted = sum(r.met_slo for r in admitted) / len(admitted)
+    assert att_admitted > rep_all.slo_attainment
+    # token bit-identity on the jointly finished set: admission changes
+    # WHO runs, never the math of what runs
+    toks_all = _tokens(rep_all)
+    for r in rep_ctl.requests:
+        if r.tokens_out is not None and toks_all.get(r.req_id):
+            assert tuple(r.tokens_out) == toks_all[r.req_id]

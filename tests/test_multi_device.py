@@ -7,6 +7,7 @@ streams must be bit-identical at every mesh size: placement changes time
 attribution, never a tenant's execution math or step order.
 """
 import copy
+import dataclasses
 
 import jax
 import jax.numpy as jnp
@@ -80,7 +81,7 @@ def test_fleet_tokens_bit_identical_across_mesh_sizes(fleet_factory):
     for n in (1, 2, 4):
         eng = ServingEngine(fleet_factory(), mode="vliw", num_devices=n,
                             certify=True)
-        rep = eng.run(copy.deepcopy(_fleet_trace()))
+        rep = eng.run(_fleet_trace())
         assert rep.unfinished == 0
         outs[n] = _tokens(rep)
         assert all(len(t) == 3 for t in outs[n].values())
@@ -90,9 +91,11 @@ def test_fleet_tokens_bit_identical_across_mesh_sizes(fleet_factory):
     isolated = {}
     trace = _fleet_trace()
     for tenant in fleet_factory():
-        sub = [copy.deepcopy(r) for r in trace if r.tenant == tenant.name]
-        for r in sub:   # re-base arrivals; identity (req_id) is unchanged
-            r.arrival_t -= sub[0].arrival_t
+        sub = [r for r in trace if r.tenant == tenant.name]
+        # re-base arrivals on copies; identity (req_id) is unchanged
+        t0 = sub[0].arrival_t
+        sub = [dataclasses.replace(r, arrival_t=r.arrival_t - t0)
+               for r in sub]
         eng = ServingEngine([tenant], mode="vliw")
         isolated.update(_tokens(eng.run(sub)))
     assert isolated == outs[1]
@@ -101,7 +104,7 @@ def test_fleet_tokens_bit_identical_across_mesh_sizes(fleet_factory):
 def test_mesh_run_reports_per_device_accounting(fleet_factory):
     eng = ServingEngine(fleet_factory(), mode="vliw", num_devices=4,
                         certify=True)
-    rep = eng.run(copy.deepcopy(_fleet_trace()))
+    rep = eng.run(_fleet_trace())
     assert rep.num_devices == 4
     assert len(rep.device_time_s) == len(rep.device_busy_s) == 4
     # every device got work (8 tenants, greedy fill) and the makespan is
@@ -126,7 +129,7 @@ def test_mesh_not_slower_and_no_cross_device_groups(fleet_factory):
     for n in (1, 4):
         eng = ServingEngine(fleet_factory(), mode="vliw", num_devices=n,
                             certify=True)
-        reps[n] = (eng.run(copy.deepcopy(sat)), eng.last_trace)
+        reps[n] = (eng.run(sat), eng.last_trace)
     rep4, trace4 = reps[4]
     rep1, _ = reps[1]
     assert rep4.modeled_time_s < rep1.modeled_time_s
@@ -147,7 +150,7 @@ def test_placement_deterministic_and_skew_bounded(fleet_factory):
     assignments = []
     for _ in range(2):
         eng = ServingEngine(fleet_factory(), mode="vliw", num_devices=4)
-        eng.run(copy.deepcopy(_fleet_trace()))
+        eng.run(_fleet_trace())
         assignments.append({n: (p.device, p.expert_span)
                             for n, p in eng.placement.assignments.items()})
         # greedy LPT-style guarantee: no device exceeds the ideal share
@@ -182,7 +185,7 @@ def test_expert_span_requires_divisibility():
 def mesh_trace(fleet_factory):
     eng = ServingEngine(fleet_factory(), mode="vliw", num_devices=2,
                         certify=True)
-    rep = eng.run(copy.deepcopy(_fleet_trace()))
+    rep = eng.run(_fleet_trace())
     assert rep.jit.hazard_checks > 0 and rep.jit.hazard_violations == 0
     return eng.last_trace
 

@@ -5,7 +5,6 @@ rates, weight hot-swap invalidation, cross-tenant expert-GEMM coalescing,
 the mixed dense+MoE+SSM+int8-KV fleet staying token-identical across all
 three serving modes, and the PlanCache byte-budget regressions for the
 bigger stacked expert packs this path introduces."""
-import copy
 import dataclasses
 
 import jax
@@ -172,7 +171,7 @@ def test_nondense_steady_state_hit_rate_and_cached_identity(arch,
     for cap in (128, 0):     # cached vs rebuild-per-step baseline
         eng = ServingEngine([Tenant("a", m, p, cache_len=32, max_batch=2)],
                             mode="vliw", plan_capacity=cap)
-        reps[cap] = eng.run(copy.deepcopy(trace))
+        reps[cap] = eng.run(trace)
     assert _tokens(reps[128]) == _tokens(reps[0])   # bit-identical tokens
     pc = reps[128].jit.plan_cache
     # miss only on the first step; every steady-state tick binds from cache
@@ -194,14 +193,14 @@ def test_nondense_weight_hot_swap_invalidates(fleet_models):
     trace2 = [ServeRequest(1, "a", 0.0, 8, 3, 1.0)]
     eng = ServingEngine([Tenant("a", m, p_old, cache_len=32, max_batch=2)],
                         mode="vliw")
-    eng.run(copy.deepcopy(trace1))
+    eng.run(trace1)
     assert eng.jit.plan_cache.stats.invalidations == 0
     eng.tenants["a"].params = p_new          # weight hot-swap, same model
-    rep_swapped = eng.run(copy.deepcopy(trace2))
+    rep_swapped = eng.run(trace2)
     assert eng.jit.plan_cache.stats.invalidations >= 1
     fresh = ServingEngine([Tenant("a", m, p_new, cache_len=32, max_batch=2)],
                           mode="vliw")
-    rep_fresh = fresh.run(copy.deepcopy(trace2))
+    rep_fresh = fresh.run(trace2)
     assert _tokens(rep_swapped) == _tokens(rep_fresh)
 
 
@@ -222,7 +221,7 @@ def test_mixed_fleet_three_modes_token_identity(fleet_models):
     toks = {}
     for mode in ("time", "batched", "vliw"):
         eng = ServingEngine(tenants(), mode=mode)
-        rep = eng.run(copy.deepcopy(trace))
+        rep = eng.run(trace)
         toks[mode] = {r.tenant: r.tokens_out for r in rep.requests}
         assert all(len(t) == 3 for t in toks[mode].values())
         if mode == "vliw":
@@ -233,8 +232,7 @@ def test_mixed_fleet_three_modes_token_identity(fleet_models):
     # per-tenant isolation: co-tenants cannot change anyone's tokens
     for name in names:
         eng = ServingEngine(tenants(only=name), mode="batched")
-        rep = eng.run(copy.deepcopy(
-            [r for r in trace if r.tenant == name]))
+        rep = eng.run([r for r in trace if r.tenant == name])
         (req,) = rep.requests
         assert req.tokens_out == toks["vliw"][name]
 

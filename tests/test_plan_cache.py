@@ -3,7 +3,6 @@ semantics, template reuse on the serving hot path (bit-identical to
 rebuild-per-step, miss only on first step), and regression tests for the
 two ROADMAP serving bugs (max_new_tokens=1 over-generation, per-request
 eviction identity)."""
-import copy
 
 import jax
 import jax.numpy as jnp
@@ -196,7 +195,7 @@ def test_engine_cached_bit_identical_with_steady_state_hit_rate(dense_models):
         # template traffic, covered in tests/test_prefill_coalescing.py
         eng = ServingEngine(tenants(), mode="vliw", plan_capacity=cap,
                             declared_prefill=False)
-        reps[cap] = eng.run(copy.deepcopy(trace))
+        reps[cap] = eng.run(trace)
 
     # bit-identical token streams, cached vs uncached
     assert _tokens(reps[128]) == _tokens(reps[0])
@@ -226,15 +225,15 @@ def test_weight_hot_swap_invalidates_and_serves_new_weights(dense_models):
 
     eng = ServingEngine([Tenant("a", m1, p_old, cache_len=32, max_batch=2)],
                         mode="vliw")
-    eng.run(copy.deepcopy(trace1))
+    eng.run(trace1)
     assert eng.jit.plan_cache.stats.invalidations == 0
     eng.tenants["a"].params = p_new          # weight hot-swap, same model
-    rep_swapped = eng.run(copy.deepcopy(trace2))
+    rep_swapped = eng.run(trace2)
     assert eng.jit.plan_cache.stats.invalidations >= 1
 
     fresh = ServingEngine(
         [Tenant("a", m1, p_new, cache_len=32, max_batch=2)], mode="vliw")
-    rep_fresh = fresh.run(copy.deepcopy(trace2))
+    rep_fresh = fresh.run(trace2)
     assert _tokens(rep_swapped) == _tokens(rep_fresh)
 
 
@@ -259,7 +258,7 @@ def test_max_new_tokens_1_retires_at_admission_all_modes(dense_models):
     toks = {}
     for mode in ("time", "batched", "vliw"):
         eng = ServingEngine(tenants(), mode=mode)
-        rep = eng.run(copy.deepcopy(trace))
+        rep = eng.run(trace)
         r0, r1 = sorted(rep.requests, key=lambda r: r.req_id)
         assert len(r0.tokens_out) == 1    # exactly its one prefill token
         assert len(r1.tokens_out) == 4    # batchmate unaffected
@@ -280,7 +279,7 @@ def test_straggler_next_to_healthy_batchmate_counts_once(dense_models):
     trace = [ServeRequest(0, "a", 0.0, 8, 5, 1e-9),   # already-missed
              ServeRequest(1, "a", 0.0, 8, 5, 10.0)]   # healthy batchmate
     eng = ServingEngine(tenants, mode="vliw")
-    rep = eng.run(copy.deepcopy(trace))
+    rep = eng.run(trace)
     # exactly once for the straggler: not 0 (hidden behind the healthy
     # anchor), not once per step or per GEMM stage
     assert rep.jit.evictions == 1

@@ -1,7 +1,6 @@
 """Prefill through the JIT (ISSUE 3): prompt GEMMs as first-class declared
 ops that coalesce with decode (and other tenants' prefill) traffic, the
 serving-metric bugfixes, and the event-loop stall guard."""
-import copy
 import math
 
 import jax
@@ -124,7 +123,7 @@ def test_long_prompt_modes_identical_and_prefill_coalesces(dense_models):
     reps = {}
     for mode in ("time", "batched", "vliw"):
         eng = ServingEngine(tenants(), mode=mode)
-        reps[mode] = eng.run(copy.deepcopy(trace))
+        reps[mode] = eng.run(trace)
         assert all(len(r.tokens_out) == 3 for r in reps[mode].requests)
     assert _tokens(reps["time"]) == _tokens(reps["batched"]) \
         == _tokens(reps["vliw"])
@@ -133,7 +132,7 @@ def test_long_prompt_modes_identical_and_prefill_coalesces(dense_models):
     # declared prefill must not regress the makespan vs the analytic
     # serialized-prefill ablation of the same engine
     ablate = ServingEngine(tenants(), mode="vliw", declared_prefill=False)
-    rep_ablate = ablate.run(copy.deepcopy(trace))
+    rep_ablate = ablate.run(trace)
     assert _tokens(rep_ablate) == _tokens(reps["vliw"])
     assert reps["vliw"].modeled_time_s <= rep_ablate.modeled_time_s * 1.001
 
@@ -151,7 +150,7 @@ def test_single_token_request_retires_at_prefill_completion(dense_models):
     reps = {}
     for mode in ("batched", "vliw"):
         eng = ServingEngine(tenants(), mode=mode)
-        reps[mode] = eng.run(copy.deepcopy(trace))
+        reps[mode] = eng.run(trace)
     assert _tokens(reps["batched"]) == _tokens(reps["vliw"])
     (req,) = reps["vliw"].requests
     assert len(req.tokens_out) == 1
@@ -197,24 +196,30 @@ def test_tokens_per_s_counts_emitted_not_requested():
     assert rep.tokens_per_s == pytest.approx(11.0)   # not 24.0
 
 
-def test_latency_stats_exclude_unfinished_requests():
-    """Regression: one never-finished request (finish_t = NaN) used to
-    poison mean/percentile latency; drops are now visible as
-    ``unfinished`` instead."""
+def test_latency_stats_count_unfinished_requests():
+    """Regression (front-door sweep): ``mean_latency`` stays finished-only
+    (a NaN finish used to poison the whole mean), but attainment and
+    percentile latency now COUNT unfinished/shed requests — as misses and
+    as +inf latencies — instead of silently excluding them, which inflated
+    both the moment anything was dropped."""
     reqs = [_req(0, max_new=4, emitted=4, finish_t=1.0),
             _req(1, max_new=4, emitted=4, finish_t=3.0),
             _req(2, max_new=4, emitted=1, finish_t=float("nan"))]
     rep = ServeReport("vliw", reqs, modeled_time_s=1.0, wall_time_s=0.0)
     assert rep.unfinished == 1
-    assert rep.mean_latency == pytest.approx(2.0)
-    assert rep.p_latency(1.0) == pytest.approx(3.0)
-    assert not math.isnan(rep.slo_attainment)
+    assert rep.mean_latency == pytest.approx(2.0)   # finished-only
+    assert rep.p_latency(0.5) == pytest.approx(3.0)
+    assert rep.p_latency(1.0) == math.inf            # the drop is visible
+    # slo_s=2.0: req 0 meets (1.0), req 1 misses (3.0), req 2 never
+    # finished — a miss, not an exclusion
+    assert rep.slo_attainment == pytest.approx(1.0 / 3.0)
 
     none_done = ServeReport("vliw", [_req(0, 4, 1, float("nan"))],
                             modeled_time_s=1.0, wall_time_s=0.0)
     assert none_done.unfinished == 1
     assert math.isnan(none_done.mean_latency)
-    assert math.isnan(none_done.p_latency(0.5))
+    assert none_done.p_latency(0.5) == math.inf
+    assert none_done.slo_attainment == 0.0
 
 
 # ---------------------------------------------------------------------------

@@ -1,5 +1,4 @@
 """Serving engine: continuous batching, mode equivalence, SLO accounting."""
-import copy
 
 import jax
 import jax.numpy as jnp
@@ -41,7 +40,7 @@ def test_modes_generate_identical_tokens(tenants_factory):
     outs = {}
     for mode in ("time", "batched", "vliw"):
         eng = ServingEngine(tenants_factory(), mode=mode)
-        rep = eng.run(copy.deepcopy(_trace()))
+        rep = eng.run(_trace())
         outs[mode] = [r.tokens_out for r in
                       sorted(rep.requests, key=lambda r: r.req_id)]
         assert all(len(t) == 3 for t in outs[mode])
@@ -52,7 +51,7 @@ def test_vliw_not_slower_than_time_mode(tenants_factory):
     reps = {}
     for mode in ("time", "vliw"):
         eng = ServingEngine(tenants_factory(), mode=mode)
-        reps[mode] = eng.run(copy.deepcopy(_trace()))
+        reps[mode] = eng.run(_trace())
     assert reps["vliw"].modeled_time_s <= reps["time"].modeled_time_s * 1.001
     assert reps["vliw"].jit.superkernels > 0
 
@@ -65,7 +64,7 @@ def test_continuous_batching_admits_midstream(tenants_factory):
     # force the second request to arrive strictly later
     trace[1].arrival_t = trace[0].arrival_t + 1e-9
     eng = ServingEngine(tenants_factory()[:1], mode="batched")
-    rep = eng.run(copy.deepcopy(trace))
+    rep = eng.run(trace)
     assert all(len(r.tokens_out) == 6 for r in rep.requests)
     assert rep.slo_attainment == 1.0
 

@@ -6,7 +6,6 @@ stacked dispatch path must keep the steady-state plan-cache hit rate and
 the packed-weight guard discipline (zero phantom invalidations, real
 hot-swaps trip the guard); and a production-depth (48-layer) config must
 serve end-to-end through the vliw mode with O(1)-in-depth templates."""
-import copy
 import dataclasses
 
 import jax
@@ -145,7 +144,7 @@ def test_engine_stacked_vs_per_layer_token_identity(models):
         eng = ServingEngine([Tenant("a", m, params, cache_len=32,
                                     max_batch=2)], mode="vliw",
                             stacked_layers=stacked)
-        reps[stacked] = eng.run(copy.deepcopy(trace))
+        reps[stacked] = eng.run(trace)
     assert _tokens(reps[True]) == _tokens(reps[False])
 
 
@@ -159,7 +158,7 @@ def test_stacked_steady_state_hit_rate_and_guard(models):
     eng = ServingEngine([Tenant("a", m, params, cache_len=32,
                                 max_batch=2)], mode="vliw")
     assert eng.stacked_layers          # stacked is the default regime
-    rep = eng.run(copy.deepcopy(trace))
+    rep = eng.run(trace)
     pc = rep.jit.plan_cache
     assert pc.hit_rate >= (steps - 1) / steps - 1e-9
     assert pc.invalidations == 0
@@ -181,14 +180,14 @@ def test_stacked_hot_swap_trips_guard(models):
     trace2 = [ServeRequest(1, "a", 0.0, 8, 3, 1.0)]
     eng = ServingEngine([Tenant("a", m, p_old, cache_len=32, max_batch=2)],
                         mode="vliw")
-    eng.run(copy.deepcopy(trace1))
+    eng.run(trace1)
     assert eng.jit.plan_cache.stats.invalidations == 0
     eng.tenants["a"].params = p_new      # hot-swap, same model object
-    rep_swapped = eng.run(copy.deepcopy(trace2))
+    rep_swapped = eng.run(trace2)
     assert eng.jit.plan_cache.stats.invalidations >= 1
     fresh = ServingEngine([Tenant("a", m, p_new, cache_len=32,
                                   max_batch=2)], mode="vliw")
-    rep_fresh = fresh.run(copy.deepcopy(trace2))
+    rep_fresh = fresh.run(trace2)
     assert _tokens(rep_swapped) == _tokens(rep_fresh)
 
 
@@ -209,7 +208,7 @@ def test_depth_48_serves_end_to_end():
     for mode in ("vliw", "batched"):
         eng = ServingEngine([Tenant("a", m, params, cache_len=32,
                                     max_batch=2)], mode=mode)
-        reps[mode] = eng.run(copy.deepcopy(trace))
+        reps[mode] = eng.run(trace)
     toks = _tokens(reps["vliw"])
     assert toks == _tokens(reps["batched"])
     assert all(len(t) == 3 for t in toks)
